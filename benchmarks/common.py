@@ -1,0 +1,35 @@
+"""Shared benchmark plumbing. Every figure module exposes
+``run(quick=True) -> list[str]`` of CSV rows ``name,us_per_call,derived``."""
+from __future__ import annotations
+
+import sys
+import time
+
+from repro.core.lock import (simulate, extract, simulate_aria, extract_aria,
+                             WorkloadSpec, CostModel)
+
+
+def cc_point(proto, workload, threads, horizon, costs=None, name=None,
+             **kw):
+    """One CC-engine measurement -> (csv_row, SimResult)."""
+    t0 = time.perf_counter()
+    if proto == "aria":
+        s = simulate_aria(workload, threads, costs=costs, horizon=horizon)
+        r = extract_aria(threads, s)
+    else:
+        s = simulate(proto, workload, n_threads=threads, horizon=horizon,
+                     costs=costs, **kw)
+        r = extract(proto, threads, s)
+    wall_us = (time.perf_counter() - t0) * 1e6
+    nm = name or f"{proto}_T{threads}"
+    row = (f"{nm},{wall_us:.0f},tps={r.tps:.0f};p95us={r.p95_latency_us:.0f}"
+           f";abort={r.abort_rate:.3f};lockops={r.lock_ops}"
+           f";cpu={r.cpu_util:.2f};waitfrac={r.lock_wait_frac:.2f}")
+    return row, r
+
+
+def emit(rows):
+    for r in rows:
+        print(r)
+    sys.stdout.flush()
+    return rows

@@ -1,0 +1,74 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from the dry-run
+artifacts. (§Perf is hand-written — it is an iteration log.)"""
+import glob
+import json
+import os
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "dryrun")
+
+
+def _load():
+    cells = []
+    for f in sorted(glob.glob(os.path.join(OUT_DIR, "*.json"))):
+        cells.append(json.load(open(f)))
+    return cells
+
+
+def dryrun_table():
+    rows = ["| arch | shape | mesh | compile s | args GiB | temps GiB | "
+            "out GiB | fallbacks |",
+            "|---|---|---|---|---|---|---|---|"]
+    gb = 1 << 30
+    n_ok = n_err = 0
+    for r in _load():
+        if "error" in r:
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"ERROR: {r['error'][:60]} | | | | |")
+            n_err += 1
+            continue
+        n_ok += 1
+        m = r["memory"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['compile_s']:.0f} | "
+            f"{(m['argument_bytes'] or 0) / gb:.2f} | "
+            f"{(m['temp_bytes'] or 0) / gb:.2f} | "
+            f"{(m['output_bytes'] or 0) / gb:.2f} | "
+            f"{r['sharding_fallbacks']} |")
+    rows.append(f"\n**{n_ok} cells compiled, {n_err} errors.**")
+    return "\n".join(rows)
+
+
+def roofline_table(mesh="16x16"):
+    rows = ["| arch | shape | t_comp ms | t_mem ms | t_coll ms | "
+            "bottleneck | useful | MFU bound | coll top |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in _load():
+        if "error" in r or r["mesh"] != mesh:
+            continue
+        roof = r["roofline"]
+        br = roof.get("coll_breakdown", {})
+        top = max(br, key=br.get) if br and max(br.values()) else "-"
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | "
+            f"{roof['t_compute_s'] * 1e3:.2f} | "
+            f"{roof['t_memory_s'] * 1e3:.2f} | "
+            f"{roof['t_collective_s'] * 1e3:.2f} | "
+            f"**{roof['bottleneck']}** | {roof['useful_ratio']:.2f} | "
+            f"{roof['mfu_bound']:.2f} | {top} |")
+    return "\n".join(rows)
+
+
+def run(quick=True):
+    print("## Dry-run\n")
+    print(dryrun_table())
+    print("\n## Roofline (single-pod 16x16)\n")
+    print(roofline_table("16x16"))
+    print("\n## Roofline (multi-pod 2x16x16)\n")
+    print(roofline_table("2x16x16"))
+    return []
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,29 @@
+"""Fig 7: hotspot workloads varying write ratio and transaction length."""
+import dataclasses
+from .common import cc_point, emit
+from repro.core.lock import WorkloadSpec
+
+PROTOS = ["mysql", "o2", "group"]
+
+
+def run(quick=True):
+    horizon = 150_000 if quick else 600_000
+    rows = []
+    base = WorkloadSpec(kind="hotspot_update", txn_len=8, n_rows=4096)
+    for wr in ([0.25, 0.75] if quick else [0.1, 0.25, 0.5, 0.75, 0.9]):
+        w = dataclasses.replace(base, write_ratio=wr)
+        for p in PROTOS:
+            row, _ = cc_point(p, w, 256, horizon,
+                              name=f"fig7a_{p}_wr{wr}")
+            rows.append(row)
+    for tl in ([2, 12] if quick else [2, 6, 12, 20]):
+        w = dataclasses.replace(base, txn_len=tl, write_ratio=0.5)
+        for p in PROTOS:
+            row, _ = cc_point(p, w, 256, horizon,
+                              name=f"fig7b_{p}_tl{tl}")
+            rows.append(row)
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

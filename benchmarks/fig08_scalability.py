@@ -1,0 +1,22 @@
+"""Fig 8: scalability in thread count, all protocols + Aria."""
+from .common import cc_point, emit
+from repro.core.lock import WorkloadSpec
+
+HOT = WorkloadSpec(kind="hotspot_update", txn_len=1, n_rows=512)
+PROTOS = ["mysql", "o1", "o2", "group", "bamboo", "aria"]
+
+
+def run(quick=True):
+    horizon = 200_000 if quick else 800_000
+    threads = [1, 64, 256, 1024] if quick else [1, 16, 64, 128, 256, 512,
+                                                1024]
+    rows = []
+    for t in threads:
+        for p in PROTOS:
+            row, _ = cc_point(p, HOT, t, horizon, name=f"fig8_{p}_T{t}")
+            rows.append(row)
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

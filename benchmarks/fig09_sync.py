@@ -1,0 +1,31 @@
+"""Fig 9: synchronous vs asynchronous replication (FiT-calibrated costs:
+the update chain includes the SQL layer ~50us; sync = 1ms network)."""
+from .common import cc_point, emit
+from repro.core.lock import WorkloadSpec, CostModel
+
+HOT = WorkloadSpec(kind="hotspot_update", txn_len=1, n_rows=512)
+PROTOS = ["mysql", "o2", "group", "bamboo", "aria"]
+
+
+def run(quick=True):
+    horizon = 2_000_000 if quick else 6_000_000
+    rows = []
+    for mode, lat in [("sync", 10_000), ("async", 1_000)]:
+        cm = CostModel(op_exec=500, sync_lat=lat)
+        base = None
+        for p in PROTOS:
+            row, r = cc_point(p, HOT, 256, horizon, costs=cm,
+                              name=f"fig9_{mode}_{p}",
+                              **({} if p == "aria" else
+                                 dict(wait_timeout=2_000_000)))
+            rows.append(row)
+            if p == "mysql":
+                base = r.tps
+            if p == "group" and base:
+                rows.append(f"fig9_{mode}_speedup,0,group_over_mysql="
+                            f"{r.tps / max(base, 1):.1f}")
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

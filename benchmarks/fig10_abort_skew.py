@@ -1,0 +1,32 @@
+"""Fig 10: (left) injected rollbacks -> cascading aborts for TXSQL/Bamboo;
+(right) access skewness sweep (Zipf)."""
+import dataclasses
+from .common import cc_point, emit
+from repro.core.lock import WorkloadSpec
+
+HOTRW = WorkloadSpec(kind="hotspot_update", txn_len=4, n_rows=4096,
+                     write_ratio=0.5)
+
+
+def run(quick=True):
+    horizon = 150_000 if quick else 600_000
+    rows = []
+    for pab in ([0.0, 0.05] if quick else [0.0, 0.01, 0.05, 0.1]):
+        for p in ["group", "bamboo"]:
+            row, r = cc_point(p, HOTRW, 128, horizon, p_abort=pab,
+                              name=f"fig10a_{p}_inj{pab}")
+            rows.append(row)
+            rows.append(
+                f"fig10a_{p}_inj{pab}_cascade,0,"
+                f"amplification={r.forced_aborts / max(r.user_aborts, 1):.1f}")
+    for sf in ([0.7, 0.99] if quick else [0.5, 0.7, 0.9, 0.99]):
+        w = WorkloadSpec(kind="zipf", txn_len=1, n_rows=8192, zipf_s=sf)
+        for p in ["mysql", "group", "bamboo", "aria"]:
+            row, _ = cc_point(p, w, 256, horizon,
+                              name=f"fig10b_{p}_sf{sf}")
+            rows.append(row)
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

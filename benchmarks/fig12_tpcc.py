@@ -1,0 +1,23 @@
+"""Fig 12: TPC-C-like workload, contention controlled by warehouse count."""
+import dataclasses
+from .common import cc_point, emit
+from repro.core.lock import WorkloadSpec
+
+PROTOS = ["mysql", "group", "bamboo", "aria"]
+
+
+def run(quick=True):
+    horizon = 200_000 if quick else 800_000
+    rows = []
+    for wh in ([1, 16] if quick else [1, 4, 16, 64]):
+        w = WorkloadSpec(kind="tpcc", txn_len=10, n_rows=8192,
+                         n_warehouses=wh, write_ratio=0.6)
+        for p in PROTOS:
+            row, _ = cc_point(p, w, 128, horizon,
+                              name=f"fig12_{p}_wh{wh}")
+            rows.append(row)
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

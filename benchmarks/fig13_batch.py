@@ -1,0 +1,39 @@
+"""Fig 13: group-lock batch size (fixed vs dynamic close), group commit in
+sync/async replication, fixed-TPS arrival latency effect (§4.6.1)."""
+import dataclasses
+from .common import cc_point, emit
+from repro.core.lock import WorkloadSpec, CostModel
+
+HOT = WorkloadSpec(kind="hotspot_update", txn_len=1, n_rows=512)
+
+
+def run(quick=True):
+    horizon = 400_000 if quick else 1_500_000
+    rows = []
+    # batch size sweep at high + low concurrency
+    for t in [32, 512]:
+        for b in ([1, 10, 64] if quick else [1, 4, 10, 32, 64, 256]):
+            row, _ = cc_point("group", HOT, t, horizon, batch_size=b,
+                              dynamic_batch=False,
+                              name=f"fig13a_B{b}_T{t}")
+            rows.append(row)
+    # dynamic vs fixed batch under a fixed-TPS (open-loop) arrival model
+    cm = CostModel(arrival_rate=2.0)          # 2 txsqueued/tick = 20k TPS
+    for mode, dyn in [("fixed", False), ("dynamic", True)]:
+        row, r = cc_point("group", HOT, 64, horizon, costs=cm,
+                          batch_size=32, dynamic_batch=dyn,
+                          name=f"fig13b_{mode}")
+        rows.append(row)
+    # group commit on/off, sync vs async
+    for mode, lat in [("sync", 10_000), ("async", 1_000)]:
+        cm = CostModel(op_exec=500, sync_lat=lat)
+        for gc in (True, False):
+            row, _ = cc_point("group", HOT, 512, horizon * 3, costs=cm,
+                              group_commit=gc,
+                              name=f"fig13c_{mode}_gc{int(gc)}")
+            rows.append(row)
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

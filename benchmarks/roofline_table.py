@@ -1,0 +1,44 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline)."""
+import glob
+import json
+import os
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "dryrun")
+
+HEADER = ("arch,shape,mesh,bottleneck,t_compute_ms,t_memory_ms,"
+          "t_collective_ms,useful_ratio,mfu_bound,args_gib,temps_gib")
+
+
+def rows(mesh_filter=None):
+    out = []
+    for f in sorted(glob.glob(os.path.join(OUT_DIR, "*.json"))):
+        r = json.load(open(f))
+        if "error" in r:
+            out.append(f"{r['arch']},{r['shape']},{r['mesh']},"
+                       f"ERROR,,,,,,,")
+            continue
+        if mesh_filter and r["mesh"] != mesh_filter:
+            continue
+        roof = r["roofline"]
+        gb = 1 << 30
+        out.append(
+            f"{r['arch']},{r['shape']},{r['mesh']},{roof['bottleneck']},"
+            f"{roof['t_compute_s'] * 1e3:.2f},"
+            f"{roof['t_memory_s'] * 1e3:.2f},"
+            f"{roof['t_collective_s'] * 1e3:.2f},"
+            f"{roof['useful_ratio']:.3f},{roof['mfu_bound']:.3f},"
+            f"{(r['memory']['argument_bytes'] or 0) / gb:.2f},"
+            f"{(r['memory']['temp_bytes'] or 0) / gb:.2f}")
+    return out
+
+
+def run(quick=True):
+    out = [HEADER] + rows()
+    for r in out:
+        print(r)
+    return out
+
+
+if __name__ == "__main__":
+    run()

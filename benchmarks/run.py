@@ -1,0 +1,46 @@
+"""Benchmark aggregator: one module per paper figure/table.
+
+Prints ``name,us_per_call,derived`` CSV. ``--full`` widens sweeps;
+``--only fig08`` runs one module.
+"""
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args, _ = ap.parse_known_args()
+    quick = not args.full
+
+    from . import (fig02_motivation, fig06_ablation, fig07_mix,
+                   fig08_scalability, fig09_sync, fig10_abort_skew,
+                   fig12_tpcc, fig13_batch, fig14_recovery, kernel_bench,
+                   roofline_table)
+    modules = {
+        "fig02": fig02_motivation, "fig06": fig06_ablation,
+        "fig07": fig07_mix, "fig08": fig08_scalability,
+        "fig09": fig09_sync, "fig10": fig10_abort_skew,
+        "fig12": fig12_tpcc, "fig13": fig13_batch,
+        "fig14": fig14_recovery, "kernels": kernel_bench,
+        "roofline": roofline_table,
+    }
+    if args.only:
+        modules = {args.only: modules[args.only]}
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name, mod in modules.items():
+        print(f"# --- {name} ---")
+        sys.stdout.flush()
+        try:
+            mod.run(quick=quick)
+        except Exception as e:  # keep the harness going
+            print(f"{name}_ERROR,0,{type(e).__name__}:{e}")
+    print(f"# total_wall_s={time.time() - t0:.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Batched serving with TXSQL-style dynamic group commit (§4.6.1).
+
+    PYTHONPATH=src python examples/serve_batched.py --requests 16
+"""
+import os
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

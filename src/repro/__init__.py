@@ -1,0 +1,3 @@
+"""repro: TXSQL lock optimizations as a multi-pod JAX framework."""
+
+__version__ = "0.1.0"

@@ -1,0 +1,4 @@
+from .checkpointer import Checkpointer
+from .journal import Journal
+
+__all__ = ["Checkpointer", "Journal"]

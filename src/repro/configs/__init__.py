@@ -1,0 +1,92 @@
+"""Architecture registry + per-shape input specs (ShapeDtypeStructs).
+
+``input_specs(cfg, shape)`` returns abstract inputs for the step function a
+shape lowers (train_step / prefill_step / serve_step), following the
+assignment: [audio]/[vlm] archs get precomputed frame/patch embeddings
+(frontend stubs); decode shapes get a KV/state cache of ``seq_len``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .base import ModelConfig, ShapeSpec, SHAPES, SUBQUADRATIC, shape_grid
+from . import (deepseek_coder_33b, qwen2_0_5b, gemma3_12b, command_r_35b,
+               arctic_480b, deepseek_v2_lite_16b, recurrentgemma_2b,
+               musicgen_medium, qwen2_vl_2b, mamba2_1_3b)
+
+_MODULES = {
+    "deepseek-coder-33b": deepseek_coder_33b,
+    "qwen2-0.5b": qwen2_0_5b,
+    "gemma3-12b": gemma3_12b,
+    "command-r-35b": command_r_35b,
+    "arctic-480b": arctic_480b,
+    "deepseek-v2-lite-16b": deepseek_v2_lite_16b,
+    "recurrentgemma-2b": recurrentgemma_2b,
+    "musicgen-medium": musicgen_medium,
+    "qwen2-vl-2b": qwen2_vl_2b,
+    "mamba2-1.3b": mamba2_1_3b,
+}
+
+ARCHS = tuple(_MODULES.keys())
+
+
+def get_config(name: str, smoke: bool = False) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_MODULES)}")
+    return _MODULES[name].SMOKE if smoke else _MODULES[name].CONFIG
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, per_host_batch=None):
+    """Abstract inputs (no allocation) for the step lowered by `shape`."""
+    B = per_host_batch or shape.global_batch
+    S = shape.seq_len
+    i32 = jnp.int32
+    bf16 = jnp.bfloat16
+
+    def tok(b, s):
+        return jax.ShapeDtypeStruct((b, s), i32)
+
+    def emb(b, s):
+        return jax.ShapeDtypeStruct((b, s, cfg.d_model), bf16)
+
+    if shape.step == "train":
+        batch = {}
+        if cfg.embed_inputs:
+            batch["tokens"] = tok(B, S)
+        else:
+            batch["embeds"] = emb(B, S)
+        if cfg.n_codebooks:
+            batch["labels"] = jax.ShapeDtypeStruct((B, S, cfg.n_codebooks),
+                                                   i32)
+        else:
+            batch["labels"] = tok(B, S)
+        if cfg.mrope:
+            batch["positions3"] = jax.ShapeDtypeStruct((3, B, S), i32)
+        return {"batch": batch}
+
+    if shape.step == "prefill":
+        d = {}
+        if cfg.embed_inputs:
+            d["tokens"] = tok(B, S)
+        else:
+            d["embeds"] = emb(B, S)
+        if cfg.mrope:
+            d["positions3"] = jax.ShapeDtypeStruct((3, B, S), i32)
+        return d
+
+    # decode: one new token against a seq_len cache
+    from repro.models.transformer import lm_cache_shapes
+    d = {"caches": lm_cache_shapes(cfg, B, S, jnp.dtype(cfg.kv_dtype)),
+         "pos": jax.ShapeDtypeStruct((), i32)}
+    if cfg.embed_inputs:
+        d["tokens"] = tok(B, 1)
+    else:
+        d["embeds"] = emb(B, 1)
+    if cfg.mrope:
+        d["positions3"] = jax.ShapeDtypeStruct((3, B, 1), i32)
+    return d
+
+
+__all__ = ["ModelConfig", "ShapeSpec", "SHAPES", "SUBQUADRATIC",
+           "shape_grid", "ARCHS", "get_config", "input_specs"]

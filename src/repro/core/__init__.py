@@ -1,0 +1,13 @@
+"""Paper core: TXSQL lock optimizations, faithful (lock/) and adapted."""
+from .hotspot import (DEFAULT_THRESHOLD, HotspotState, batch_counts,
+                      detect_hot, init_hotspot, update_hotspot)
+from .group_apply import (Groups, form_groups, group_apply, hotspot_apply,
+                          scatter_serial)
+from .dependency import DependencyList, DependencyError
+
+__all__ = [
+    "DEFAULT_THRESHOLD", "HotspotState", "batch_counts", "detect_hot",
+    "init_hotspot", "update_hotspot",
+    "Groups", "form_groups", "group_apply", "hotspot_apply",
+    "scatter_serial", "DependencyList", "DependencyError",
+]

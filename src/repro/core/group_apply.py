@@ -1,0 +1,112 @@
+"""Grouped conflict-update apply — the paper's technique on tensors (§3.3).
+
+Concurrent updates to the same parameter row are the tensor analogue of
+hotspot row updates. The three schedules of the paper's Figure 3 map to:
+
+  * 2PL            -> ``scatter_serial``: one scatter per conflicting update
+                      (XLA serializes duplicate indices; every update "takes
+                      the lock").
+  * Bamboo         -> same data movement, earlier visibility: no tensor
+                      analogue of *release timing*, so not materialized.
+  * group locking  -> ``group_apply``: form conflict groups (stable sort by
+                      key = dependency-list order), execute the group's
+                      updates serially *inside* the group (a segment
+                      reduction over the sorted run — followers need no
+                      "lock"), then write once per group (the leader's
+                      single acquire/release).
+
+``group_apply`` is the pure-jnp reference; the Pallas TPU kernel lives in
+``repro/kernels/grouped_scatter`` and must match it bit-for-bit in f32.
+
+The hybrid path (``hotspot_apply``) applies the paper §4.1/§4.2 policy:
+only rows whose in-batch conflict count exceeds the threshold take the
+grouped path; cold rows go through the plain scatter (2PL), exactly like
+TXSQL reverting to 2PL for non-hotspot rows.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .hotspot import batch_counts, DEFAULT_THRESHOLD
+
+
+def scatter_serial(table: jnp.ndarray, ids: jnp.ndarray,
+                   updates: jnp.ndarray) -> jnp.ndarray:
+    """The 2PL analogue: per-update scatter-add (duplicates serialize)."""
+    return table.at[ids].add(updates.astype(table.dtype), mode="drop")
+
+
+class Groups(NamedTuple):
+    """Conflict-group structure over a batch of updates."""
+    order: jnp.ndarray        # (N,) stable-sort permutation = update order
+    sorted_ids: jnp.ndarray   # (N,) ids in group order
+    is_leader: jnp.ndarray    # (N,) first update of each group
+    group_size: jnp.ndarray   # (N,) size of the group at leader positions
+
+
+def form_groups(ids: jnp.ndarray) -> Groups:
+    """Group conflicting updates; stable order = ``hot_update_order``."""
+    ids = ids.reshape(-1)
+    order = jnp.argsort(ids, stable=True)
+    sorted_ids = ids[order]
+    is_leader = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_ids[1:] != sorted_ids[:-1]])
+    return Groups(order=order, sorted_ids=sorted_ids, is_leader=is_leader,
+                  group_size=_run_lengths(is_leader))
+
+
+def _run_lengths(is_leader: jnp.ndarray) -> jnp.ndarray:
+    """Length of each run, placed at the run's leader position (else 0)."""
+    n = is_leader.shape[0]
+    idx = jnp.arange(n)
+    starts = jnp.where(is_leader, idx, 0)
+    starts = jax.lax.associative_scan(jnp.maximum, starts)   # run start
+    # run end = next leader's position - 1 (or n-1). In reversed space a
+    # position k is a run end iff k == 0 or rev[k-1] (the next original
+    # position is a leader); scan-max then propagates the nearest end.
+    rev = is_leader[::-1]
+    mark = jnp.concatenate([jnp.ones((1,), bool), rev[:-1]])
+    rstarts = jnp.where(mark, jnp.arange(n), 0)
+    rstarts = jax.lax.associative_scan(jnp.maximum, rstarts)
+    ends = (n - 1) - rstarts[::-1]
+    return jnp.where(is_leader, ends - starts + 1, 0).astype(jnp.int32)
+
+
+def group_apply(table: jnp.ndarray, ids: jnp.ndarray,
+                updates: jnp.ndarray) -> jnp.ndarray:
+    """Group-locking analogue: sort -> in-group serial reduce -> one write
+    per group. Pure-jnp reference for the Pallas kernel."""
+    ids = ids.reshape(-1)
+    updates = updates.reshape((ids.shape[0],) + updates.shape[ids.ndim:])
+    g = form_groups(ids)
+    upd_sorted = updates[g.order].astype(jnp.float32)
+    # segment-reduce within groups: followers fold into the leader slot
+    seg = jnp.cumsum(g.is_leader.astype(jnp.int32)) - 1
+    n_seg = ids.shape[0]  # upper bound on groups
+    summed = jax.ops.segment_sum(upd_sorted, seg, num_segments=n_seg)
+    leader_rows = jnp.where(g.is_leader, g.sorted_ids, table.shape[0])
+    uniq_ids = jax.ops.segment_min(
+        leader_rows.astype(jnp.int32),
+        jnp.cumsum(g.is_leader.astype(jnp.int32)) - 1, num_segments=n_seg)
+    # one scatter per group (the leader's single lock acquire/release)
+    return table.at[uniq_ids].add(summed.astype(table.dtype), mode="drop")
+
+
+def hotspot_apply(table: jnp.ndarray, ids: jnp.ndarray,
+                  updates: jnp.ndarray,
+                  threshold: int = DEFAULT_THRESHOLD) -> jnp.ndarray:
+    """Hybrid TXSQL policy: hot rows take the grouped path, cold rows the
+    plain 2PL scatter. Bit-identical result, different schedule."""
+    ids = ids.reshape(-1)
+    updates = updates.reshape((ids.shape[0],) + updates.shape[ids.ndim:])
+    counts = batch_counts(ids, table.shape[0])
+    is_hot = counts[ids] > threshold
+    sentinel = jnp.int32(table.shape[0])        # dropped by mode="drop"
+    hot_ids = jnp.where(is_hot, ids, sentinel)
+    cold_ids = jnp.where(is_hot, sentinel, ids)
+    out = scatter_serial(table, cold_ids, updates)
+    return group_apply(out, hot_ids, updates * is_hot[:, None].astype(
+        updates.dtype) if updates.ndim > 1 else updates * is_hot)

@@ -1,0 +1,62 @@
+"""Hotspot detection for skewed-update keys (§4.1 adapted).
+
+The paper promotes a row to *hot* when its lock wait queue exceeds a
+threshold (rule of thumb: 32) and demotes it when the queue drains. The
+training-side analogue: a parameter row (embedding row, expert) is hot when
+the number of conflicting updates targeting it in the current batch exceeds
+the threshold; an EMA across steps plays the role of the background sweeper
+(promotion persists across steps; demotion when traffic drains).
+
+All functions are pure and jit-safe.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+DEFAULT_THRESHOLD = 32  # the paper's rule-of-thumb queue length
+
+
+def batch_counts(ids: jnp.ndarray, num_keys: int) -> jnp.ndarray:
+    """Per-key update counts in this batch ("queue length" per row)."""
+    ones = jnp.ones_like(ids.reshape(-1), dtype=jnp.int32)
+    return jnp.zeros((num_keys,), jnp.int32).at[ids.reshape(-1)].add(
+        ones, mode="drop")
+
+
+def detect_hot(ids: jnp.ndarray, num_keys: int,
+               threshold: int = DEFAULT_THRESHOLD) -> jnp.ndarray:
+    """One-shot hotspot mask: key has > threshold conflicting updates."""
+    return batch_counts(ids, num_keys) > threshold
+
+
+class HotspotState(NamedTuple):
+    """EMA of per-key contention, carried across steps."""
+    ema: jnp.ndarray          # (num_keys,) f32
+    hot: jnp.ndarray          # (num_keys,) bool
+    step: jnp.ndarray         # () i32
+
+
+def init_hotspot(num_keys: int) -> HotspotState:
+    return HotspotState(
+        ema=jnp.zeros((num_keys,), jnp.float32),
+        hot=jnp.zeros((num_keys,), bool),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def update_hotspot(state: HotspotState, ids: jnp.ndarray,
+                   threshold: int = DEFAULT_THRESHOLD,
+                   decay: float = 0.9,
+                   demote_below: float = 1.0) -> HotspotState:
+    """Advance the detector one step (promotion + sweeper demotion)."""
+    counts = batch_counts(ids, state.ema.shape[0]).astype(jnp.float32)
+    ema = decay * state.ema + (1.0 - decay) * counts
+    promote = counts > threshold
+    demote = state.hot & (ema < demote_below)
+    return HotspotState(
+        ema=ema,
+        hot=(state.hot | promote) & ~demote,
+        step=state.step + 1,
+    )

@@ -1,0 +1,15 @@
+"""Concurrency-control engine: the paper's faithful reproduction layer."""
+from .costs import CostModel, ProtocolParams, protocol_params, PROTOCOLS
+from .workload import WorkloadSpec, zipf_cdf
+from .engine import (EngineConfig, SimState, init_state, run_sim, simulate,
+                     START, WAIT, EXEC, CWAIT, COMMIT, RBACK, RBWAIT,
+                     BACKOFF, ARRIVE, HALT)
+from .metrics import SimResult, extract, CSV_HEADER, TICKS_PER_SEC
+from .aria import simulate_aria, extract_aria
+
+__all__ = [
+    "CostModel", "ProtocolParams", "protocol_params", "PROTOCOLS",
+    "WorkloadSpec", "zipf_cdf",
+    "EngineConfig", "SimState", "init_state", "run_sim", "simulate",
+    "SimResult", "extract", "CSV_HEADER", "TICKS_PER_SEC",
+]

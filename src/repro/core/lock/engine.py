@@ -1,0 +1,708 @@
+"""Vectorized discrete-time concurrency-control engine (the paper's core).
+
+The engine simulates T database worker threads executing transactions over R
+rows under one of five locking protocols (MySQL-2PL, O1 lightweight, O2
+queue locking, TXSQL group locking, Bamboo), tick-accurately, entirely as a
+compiled JAX program (``lax.while_loop`` over simulated time; all state in
+arrays). Aria lives in ``aria.py`` (its batch structure needs no tick loop).
+
+Modeling choices (see DESIGN.md §2.1):
+
+* Every row's lock wait queue is a **ticket queue**: ``nt[r]`` is the next
+  ticket; a thread takes a ticket when it reaches a write op. Queue/grant
+  order is ticket order (FIFO, as in lock_sys / hot_row_hash).
+* The grant rule is the protocol: strict-2PL rows grant ticket k when every
+  ticket < k has *committed* (released); early-release rows (group-locking
+  hot rows; every row under Bamboo) grant when every ticket < k has
+  *applied its update* (Fig. 3).
+* Rather than maintaining mutable queues, per-row aggregates (``us`` = next
+  grantable ticket, ``cc`` = lowest uncommitted applied ticket = commit
+  cursor, ``top`` = highest applied ticket, holder, queue length) are
+  **re-derived every iteration from the per-thread ticket table** with
+  segment reductions. Aborts simply clear ticket slots; order invariants
+  are restored declaratively, which makes cascades and timeouts robust.
+* The dependency list of the paper is exactly the ticket order of applied
+  updates: commit requires ``cc[row] == my_ticket`` (commit order = update
+  order, Alg. 2); cascades roll back from ``top`` downward (Alg. 3).
+* Costs are integer ticks (0.1us); see ``costs.py`` for where each cost
+  lands and why (deadlock-detection on the grant path reproduces Fig. 2a).
+
+The per-row value is modeled as a counter: every applied write is +1 and
+every rollback is -1, so serializability is *checkable*: at quiescence the
+counter must equal the number of committed writes (no lost updates, no
+dirty leftovers) — see tests/test_lock_properties.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .costs import CostModel, ProtocolParams, protocol_params
+from .workload import WorkloadSpec, gen_txn, will_abort
+
+I32 = jnp.int32
+F32 = jnp.float32
+INF = jnp.int32(2**30)
+NOTK = jnp.int32(-1)          # "no ticket"
+N_HIST = 64
+HIST_BASE = 1.3
+
+# thread phases
+START, WAIT, EXEC, CWAIT, COMMIT, RBACK, RBWAIT, BACKOFF, ARRIVE, HALT = \
+    range(10)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    protocol: ProtocolParams
+    costs: CostModel
+    workload: WorkloadSpec
+    n_threads: int = 64
+    horizon: int = 2_000_000          # ticks (0.1us) => 0.2s simulated
+    p_abort: float = 0.0              # injected commit-time aborts (Fig 10)
+    drain: bool = False               # run until all threads quiesce
+    max_iters: int = 1_500_000
+    seed: int = 0
+
+
+class Threads(NamedTuple):
+    phase: jnp.ndarray      # (T,)
+    work: jnp.ndarray       # (T,) remaining ticks in paying phase
+    op: jnp.ndarray         # (T,) current op slot
+    txn: jnp.ndarray        # (T,) txn counter
+    tstart: jnp.ndarray     # (T,) first-attempt start tick
+    wstart: jnp.ndarray     # (T,) wait start tick
+    willab: jnp.ndarray     # (T,) bool: injected abort at commit
+    forced: jnp.ndarray     # (T,) bool: forced abort pending
+    vabort: jnp.ndarray     # (T,) bool: abort is voluntary (move to next txn)
+    retry: jnp.ndarray      # (T,) bool: current txn is a retry
+    keys: jnp.ndarray       # (T, L)
+    iswr: jnp.ndarray       # (T, L) bool
+    dup: jnp.ndarray        # (T, L) bool
+    ticket: jnp.ndarray     # (T, L) ticket or -1
+    applied: jnp.ndarray    # (T, L) bool
+    early: jnp.ndarray      # (T, L) bool: early-release semantics at apply
+    committing: jnp.ndarray  # (T, L) bool: entered the commit queue
+    nops: jnp.ndarray       # (T,)
+
+
+class Rows(NamedTuple):
+    nt: jnp.ndarray         # (R,) next ticket
+    updating: jnp.ndarray   # (R,) bool: an update is executing
+    hot: jnp.ndarray        # (R,) bool
+    gleader: jnp.ndarray    # (R,) leader ticket of OPEN group, -1 if closed
+    gcount: jnp.ndarray     # (R,) members granted in open group
+    casc: jnp.ndarray       # (R,) cascade low ticket (INF = none)
+    batch_end: jnp.ndarray  # (R,) group-commit batch completion tick
+    batch_n: jnp.ndarray    # (R,) members in the open commit batch
+    applied_val: jnp.ndarray    # (R,) net applied increments
+    committed_val: jnp.ndarray  # (R,) committed increments
+
+
+class Globals(NamedTuple):
+    now: jnp.ndarray
+    commits: jnp.ndarray
+    user_aborts: jnp.ndarray
+    forced_aborts: jnp.ndarray
+    lock_ops: jnp.ndarray
+    wait_ticks: jnp.ndarray     # f32 (lock-wait thread-ticks)
+    busy_ticks: jnp.ndarray     # f32 (executing/committing thread-ticks)
+    lat_sum: jnp.ndarray        # f32
+    hist: jnp.ndarray           # (N_HIST,) i32 latency histogram
+    iters: jnp.ndarray
+
+
+class SimState(NamedTuple):
+    th: Threads
+    rows: Rows
+    g: Globals
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _seg_min(data, segs, R, valid):
+    data = jnp.where(valid, data, INF)
+    return jax.ops.segment_min(data.reshape(-1), segs.reshape(-1),
+                               num_segments=R)
+
+
+def _seg_max(data, segs, R, valid):
+    data = jnp.where(valid, data, -1)
+    return jax.ops.segment_max(data.reshape(-1), segs.reshape(-1),
+                               num_segments=R)
+
+
+def _seg_sum(data, segs, R, valid):
+    data = jnp.where(valid, data, 0)
+    return jax.ops.segment_sum(data.reshape(-1), segs.reshape(-1),
+                               num_segments=R)
+
+
+def _hist_bucket(lat):
+    b = jnp.log(lat.astype(F32) + 1.0) / np.log(HIST_BASE)
+    return jnp.clip(b.astype(I32), 0, N_HIST - 1)
+
+
+class Derived(NamedTuple):
+    us: jnp.ndarray           # (R,) next grantable ticket
+    cc: jnp.ndarray           # (R,) commit cursor (lowest uncommitted applied)
+    top: jnp.ndarray          # (R,) highest applied ticket (-1 none)
+    holder: jnp.ndarray       # (R,) thread holding lowest live ticket (-1)
+    n_wait: jnp.ndarray       # (R,) unapplied live tickets (queue length)
+    n_live: jnp.ndarray       # (R,) all live tickets
+    hotof: jnp.ndarray        # (T,) row of first early applied op (-1)
+    napp: jnp.ndarray         # (T,) applied op count per thread
+
+
+def _derive(cfg: EngineConfig, th: Threads, rows: Rows) -> Derived:
+    R = cfg.workload.n_rows
+    p = cfg.protocol
+    T, L = th.keys.shape
+    live = th.ticket >= 0                                    # (T, L)
+    keyf = th.keys
+
+    # A slot's semantics are frozen when applied (th.early); a slot blocks
+    # successors' updates unless it applied under early-release semantics.
+    blocking = live & (~th.applied | ~th.early)
+    us = _seg_min(th.ticket, keyf, R, blocking)
+    us = jnp.where(us == INF, rows.nt, us)
+
+    appl = live & th.applied
+    # Commit cursor: with group commit, entering the commit queue releases
+    # the *order* dependency (the batch syncs together, Fig. 5c); without
+    # it, the dependency holds until the commit completes (slot cleared).
+    cc_block = appl & (~th.committing if p.group_commit else
+                       jnp.ones_like(appl))
+    cc = _seg_min(th.ticket, keyf, R, cc_block)
+    cc = jnp.where(cc == INF, us, cc)
+    top = _seg_max(th.ticket, keyf, R, appl & ~th.committing)
+
+    tid = jnp.broadcast_to(jnp.arange(T, dtype=I32)[:, None], (T, L))
+    enc = th.ticket * I32(T) + tid
+    hmin = _seg_min(enc, keyf, R, live)
+    holder = jnp.where(hmin == INF, NOTK, hmin % I32(T))
+
+    n_wait = _seg_sum(jnp.ones_like(th.ticket), keyf, R, live & ~th.applied)
+    n_live = _seg_sum(jnp.ones_like(th.ticket), keyf, R, live)
+
+    ea = appl & th.early                                     # (T, L)
+    first = jnp.argmax(ea, axis=1)
+    hotof = jnp.where(ea.any(axis=1),
+                      keyf[jnp.arange(T), first], NOTK)
+    napp = appl.sum(axis=1).astype(I32)
+    return Derived(us, cc, top, holder, n_wait, n_live, hotof, napp)
+
+
+# ---------------------------------------------------------------------------
+# engine step
+# ---------------------------------------------------------------------------
+
+def _make_step(cfg: EngineConfig):
+    p = cfg.protocol
+    c = cfg.costs
+    w = cfg.workload
+    T = cfg.n_threads
+    R = w.n_rows
+    L = w.txn_len
+    tids = jnp.arange(T, dtype=I32)
+
+    # drain gets enough wall-clock past the horizon for timeouts to fire
+    # and cascades to unwind (livelocks then surface as drain failures)
+    stop_time = (cfg.horizon + 3 * max(p.wait_timeout, cfg.horizon)
+                 if cfg.drain else cfg.horizon)
+
+    def cur(field_tl, oph):
+        """Gather per-thread value at its current op slot (clipped)."""
+        return field_tl[tids, jnp.clip(oph, 0, L - 1)]
+
+    def step(s: SimState) -> SimState:
+        th, rows, g = s
+        d = _derive(cfg, th, rows)
+        now = g.now
+
+        cur_key = cur(th.keys, th.op)
+        cur_tkt = cur(th.ticket, th.op)
+        in_wait = th.phase == WAIT
+
+        # ------------------------------------------------ 1. mark aborts
+        forced = th.forced
+        # 1a. wait timeout
+        if p.wait_timeout > 0:
+            to = in_wait & ((now - th.wstart) >= p.wait_timeout)
+            to |= (th.phase == CWAIT) & (
+                (now - th.wstart) >= p.commit_wait_timeout)
+            forced = forced | to
+        # 1b. deadlock detection (waits-for cycle walk, up to 8 hops),
+        # 2PL-style protocols. One victim per cycle: its max thread id.
+        if p.has_detection:
+            succ = jnp.where(in_wait, d.holder[cur_key], NOTK)
+            succ = jnp.where(succ == tids, NOTK, succ)   # self-wait: none
+            walk = succ
+            mx = tids
+            on_cycle = jnp.zeros_like(in_wait)
+            for _ in range(8):
+                ok = walk >= 0
+                wi = jnp.where(ok, walk, 0)
+                mx = jnp.maximum(mx, jnp.where(ok, walk, -1))
+                on_cycle = on_cycle | (ok & (walk == tids))
+                # follow only through threads that are themselves waiting
+                walk = jnp.where(ok & (th.phase[wi] == WAIT),
+                                 succ[wi], NOTK)
+            victim = on_cycle & (tids == mx)
+            forced = forced | victim
+        # 1c. proactive hot+non-hot rollback (§4.5)
+        if p.proactive_abort:
+            hrow = d.hotof
+            hold = d.holder[cur_key]
+            hold_ok = hold >= 0
+            hold_i = jnp.where(hold_ok, hold, 0)
+            pro = (in_wait & (hrow >= 0) & hold_ok
+                   & ~rows.hot[cur_key]
+                   & (d.hotof[hold_i] == hrow) & (hold != tids))
+            forced = forced | pro
+        # 1d. cascade propagation: any applied early ticket >= casc[key]
+        casc_at = rows.casc[th.keys]                          # (T, L)
+        hit = (th.applied & th.early & (th.ticket >= 0)
+               & (th.ticket >= casc_at))
+        forced = forced | hit.any(axis=1)
+        # threads that cannot abort anymore (committing) stay
+        forced = forced & (th.phase != COMMIT) & (th.phase != HALT)
+
+        # forced threads with applied early tickets keep cascades open
+        # (idempotent marking — covers voluntary commit-point aborts too,
+        # which become forced outside this stage)
+        casc_src = (th.applied & th.early & (th.ticket >= 0)
+                    & forced[:, None])
+        casc_min = _seg_min(th.ticket, th.keys, R, casc_src)
+        casc = jnp.minimum(rows.casc, casc_min)
+        # clear finished cascades: no applied ticket at/above casc remains
+        casc = jnp.where((casc < INF) & (d.top < casc), INF, casc)
+        rows = rows._replace(casc=casc)
+        th = th._replace(forced=forced)
+
+        # ------------------------------------------------ 2. divert to RBWAIT
+        # forced threads in WAIT/CWAIT park for their cascade turn.
+        parkable = forced & ((th.phase == WAIT) | (th.phase == CWAIT))
+        phase = jnp.where(parkable, RBWAIT, th.phase)
+        th = th._replace(phase=phase,
+                         wstart=jnp.where(parkable, now, th.wstart))
+
+        # ------------------------------------------------ 4. grants
+        d2 = d  # row aggregates from top of iteration (conservative)
+        # 4a. WAIT -> EXEC
+        is_w = (th.phase == WAIT) & ~th.forced
+        key_w = cur_key
+        hot_w = rows.hot[key_w]
+        grantable = (is_w & (cur_tkt == d2.us[key_w])
+                     & ~rows.updating[key_w]
+                     & (rows.casc[key_w] == INF))
+        # group locking: leader/follower bookkeeping
+        if p.group_lock:
+            open_leader = rows.gleader[key_w]
+            is_leader_grant = grantable & hot_w & (open_leader == NOTK)
+            is_member_grant = grantable & hot_w & (open_leader != NOTK)
+        else:
+            is_leader_grant = jnp.zeros_like(grantable)
+            is_member_grant = jnp.zeros_like(grantable)
+
+        qlen = d2.n_wait[key_w].astype(F32)
+        if p.has_detection:
+            dd = (p.dd_coeff * qlen).astype(I32)
+        else:
+            dd = jnp.zeros_like(cur_tkt)
+        hotq = hot_w if p.hot_queue else jnp.zeros_like(hot_w)
+        overhead = jnp.where(
+            hotq,
+            jnp.where(is_leader_grant | ~jnp.asarray(p.group_lock),
+                      I32(p.lock_base), I32(p.grant_cost)),
+            I32(p.lock_base) + dd)
+        work_g = overhead + I32(c.op_exec)
+
+        th = th._replace(
+            phase=jnp.where(grantable, EXEC, th.phase),
+            work=jnp.where(grantable, work_g, th.work))
+        g = g._replace(
+            wait_ticks=g.wait_ticks
+            + jnp.sum(jnp.where(grantable, (now - th.wstart), 0)).astype(F32),
+            lock_ops=g.lock_ops
+            + jnp.sum(jnp.where(grantable & (~hotq | is_leader_grant), 1, 0)))
+
+        upd_new = _seg_max(jnp.ones_like(key_w), key_w, R,
+                           grantable) > 0
+        rows = rows._replace(updating=rows.updating | upd_new)
+        if p.group_lock:
+            gl = rows.gleader
+            gl = gl.at[key_w].max(jnp.where(is_leader_grant, cur_tkt, NOTK),
+                                  mode="drop")
+            gc = rows.gcount.at[key_w].add(
+                jnp.where(is_leader_grant | is_member_grant, 1, 0),
+                mode="drop")
+            # close full groups; dynamic close when queue drained
+            closed_full = gc >= p.batch_size
+            closed_dyn = (jnp.asarray(p.dynamic_batch)
+                          & (d2.n_wait == 0) & ~upd_new)
+            close = (gl != NOTK) & (closed_full | closed_dyn)
+            rows = rows._replace(
+                gleader=jnp.where(close, NOTK, gl),
+                gcount=jnp.where(close, 0, gc))
+
+        # 4b. CWAIT -> COMMIT (commit order on early rows; leader hold)
+        is_cw = (th.phase == CWAIT) & ~th.forced
+        live = th.ticket >= 0
+        cc_at = d2.cc[th.keys]
+        order_ok = jnp.where(live & th.applied & th.early,
+                             cc_at == th.ticket, True).all(axis=1)
+        no_casc = jnp.where(live, rows.casc[th.keys] == INF, True).all(axis=1)
+        if p.group_lock:
+            lead_open = jnp.where(
+                live & th.applied & th.early,
+                rows.gleader[th.keys] == th.ticket, False).any(axis=1)
+        else:
+            lead_open = jnp.zeros((T,), bool)
+        can_commit = is_cw & order_ok & no_casc & ~lead_open
+        # injected aborts divert to rollback at the commit point
+        vol = can_commit & th.willab
+        can_commit = can_commit & ~th.willab
+
+        base_cost = I32(c.commit_base + c.sync_lat)
+        if p.group_commit and c.sync_lat > 0:
+            # Group commit (Fig. 5c): while a hot row's sync window is in
+            # flight, arriving commits of that row join it (binlog group
+            # commit semantics); a new window starts only when the device
+            # is free, so windows serialize. Amortization factor is thus
+            # arrival-limited (~sync_lat / update-chain spacing).
+            hrow = d2.hotof
+            h_ok = hrow >= 0
+            hrow_i = jnp.where(h_ok, hrow, 0)
+            be = rows.batch_end[hrow_i]
+            join = can_commit & h_ok & (be > now)
+            fresh = can_commit & h_ok & ~join
+            cost = jnp.where(join, (be - now) + I32(c.commit_base),
+                             base_cost)
+            nbe = rows.batch_end.at[hrow_i].max(
+                jnp.where(fresh, now + I32(c.sync_lat), 0), mode="drop")
+            rows = rows._replace(
+                batch_end=nbe,
+                batch_n=rows.batch_n.at[hrow_i].add(
+                    jnp.where(can_commit & h_ok, 1, 0), mode="drop"))
+        else:
+            cost = jnp.broadcast_to(base_cost, (T,))
+        th = th._replace(
+            phase=jnp.where(can_commit, COMMIT,
+                            jnp.where(vol, RBWAIT, th.phase)),
+            work=jnp.where(can_commit, cost, th.work),
+            wstart=jnp.where(vol, now, th.wstart),
+            committing=th.committing | (can_commit[:, None] & th.applied),
+            forced=th.forced | vol,
+            vabort=th.vabort | vol)
+
+        # ------------------------------------------------ 4c. RBWAIT->RBACK
+        # (after 4b so voluntary commit-point aborts start their rollback
+        # in the same iteration — otherwise dt can jump to a timeout.)
+        # my turn iff for my early applied rows the top applied ticket is
+        # mine (reverse update order, Alg. 3). No early applied rows => go.
+        ea = th.applied & th.early & (th.ticket >= 0)
+        top_at = d.top[th.keys]
+        my_turn = jnp.where(ea, top_at == th.ticket, True).all(axis=1)
+        # multi-row cascade cycles (paper §6.5's excluded case) break via
+        # an out-of-order rollback after rb_turn_timeout
+        my_turn = my_turn | ((now - th.wstart) >= c.rb_turn_timeout)
+        start_rb = (th.phase == RBWAIT) & my_turn
+        rb_work = c.rb_base + c.rb_per_op * d.napp
+        th = th._replace(
+            phase=jnp.where(start_rb, RBACK, th.phase),
+            work=jnp.where(start_rb, rb_work, th.work))
+
+        # ------------------------------------------------ 5. dt & advance
+        paying = ((th.phase == EXEC) | (th.phase == COMMIT)
+                  | (th.phase == RBACK) | (th.phase == BACKOFF)
+                  | (th.phase == ARRIVE))
+        starting = th.phase == START
+        dt_pay = jnp.where(paying, th.work, INF).min()
+        if p.wait_timeout > 0:
+            texp = jnp.where(in_wait | (th.phase == CWAIT),
+                             th.wstart + p.wait_timeout - now, INF).min()
+        else:
+            texp = INF
+        rb_exp = jnp.where(th.phase == RBWAIT,
+                           th.wstart + c.rb_turn_timeout - now, INF).min()
+        texp = jnp.minimum(texp, jnp.maximum(rb_exp, 1))
+        dt = jnp.minimum(dt_pay, jnp.maximum(texp, 1))
+        dt = jnp.where(starting.any(), 0, dt)       # starts are instant
+        dt = jnp.clip(dt, 0, jnp.maximum(stop_time - now, 1))
+        now = now + dt
+        work = jnp.where(paying, th.work - dt, th.work)
+        th = th._replace(work=work)
+
+        n_busy = ((th.phase == EXEC) | (th.phase == COMMIT)
+                  | (th.phase == RBACK)).sum().astype(F32)
+        g = g._replace(now=now, iters=g.iters + 1,
+                       busy_ticks=g.busy_ticks + n_busy * dt.astype(F32))
+
+        done = paying & (work <= 0)
+
+        # ------------------------------------------------ 6. completions
+        # 6a. EXEC done: apply the write, advance op
+        e_done = done & (th.phase == EXEC)
+        wr_now = cur(th.iswr, th.op) & e_done
+        eff_wr = wr_now & ~cur(th.dup, th.op)
+        rows = rows._replace(
+            applied_val=rows.applied_val.at[cur_key].add(
+                jnp.where(eff_wr, 1, 0), mode="drop"),
+            updating=rows.updating & ~(
+                _seg_max(jnp.ones_like(cur_key), cur_key, R, eff_wr) > 0))
+        opc = jnp.clip(th.op, 0, L - 1)
+        applied = th.applied.at[tids, opc].set(
+            jnp.where(eff_wr, True, cur(th.applied, th.op)))
+        # freeze the release semantics that were in force when we applied
+        if p.early_all:
+            early_now = jnp.ones_like(eff_wr)
+        elif p.early_release:
+            early_now = rows.hot[cur_key]
+        else:
+            early_now = jnp.zeros_like(eff_wr)
+        early = th.early.at[tids, opc].set(
+            jnp.where(eff_wr, early_now, cur(th.early, th.op)))
+        th = th._replace(applied=applied, early=early)
+        nop = th.op + jnp.where(e_done, 1, 0)
+        txn_done = e_done & (nop >= th.nops)
+        th = th._replace(op=nop)
+        # forced threads stop making progress after their op completes
+        to_park = e_done & th.forced
+        th = th._replace(phase=jnp.where(to_park, RBWAIT, th.phase))
+        e_done = e_done & ~to_park
+        txn_done = txn_done & ~to_park
+        th = th._replace(
+            phase=jnp.where(txn_done, CWAIT, th.phase),
+            wstart=jnp.where(txn_done, now, th.wstart))
+        next_op = e_done & ~txn_done
+
+        # 6b. COMMIT done: release everything, count, next txn
+        c_done = done & (th.phase == COMMIT)
+        rel = th.ticket >= 0
+        committed_w = rel & th.applied & c_done[:, None]
+        rows = rows._replace(
+            committed_val=rows.committed_val.at[th.keys].add(
+                jnp.where(committed_w, 1, 0), mode="drop"))
+        lat = now - th.tstart
+        g = g._replace(
+            commits=g.commits + c_done.sum(),
+            lat_sum=g.lat_sum + jnp.where(c_done, lat, 0).sum().astype(F32),
+            hist=g.hist.at[_hist_bucket(lat)].add(
+                jnp.where(c_done, 1, 0), mode="drop"))
+
+        # 6c. RBACK done: revert applied writes, release tickets
+        r_done = done & (th.phase == RBACK)
+        reverted = rel & th.applied & r_done[:, None]
+        rows = rows._replace(
+            applied_val=rows.applied_val.at[th.keys].add(
+                jnp.where(reverted, -1, 0), mode="drop"))
+        g = g._replace(
+            user_aborts=g.user_aborts + (r_done & th.vabort).sum(),
+            forced_aborts=g.forced_aborts + (r_done & ~th.vabort).sum())
+
+        clear = (c_done | r_done)[:, None]
+        th = th._replace(
+            ticket=jnp.where(clear, NOTK, th.ticket),
+            applied=jnp.where(clear, False, th.applied),
+            early=jnp.where(clear, False, th.early),
+            committing=jnp.where(clear, False, th.committing))
+
+        # 6d. BACKOFF done -> START; COMMIT/RBACK -> next
+        # backoff is jittered per (thread, txn) to break retry lockstep
+        # (identical-key retries re-forming the same deadlock forever)
+        b_done = done & (th.phase == BACKOFF)
+        jitter = ((tids * I32(40503) + th.txn * I32(9973)) % I32(4) + 1)
+        th = th._replace(
+            phase=jnp.where(c_done | b_done, START,
+                            jnp.where(r_done, BACKOFF, th.phase)),
+            work=jnp.where(r_done, c.backoff * jitter, th.work),
+            txn=th.txn + jnp.where(c_done | (r_done & th.vabort), 1, 0),
+            retry=jnp.where(r_done & ~th.vabort, True,
+                            jnp.where(c_done, False, th.retry)),
+            forced=jnp.where(r_done, False, th.forced),
+            vabort=jnp.where(r_done, False, th.vabort),
+            op=jnp.where(c_done | r_done, 0, nop))
+
+        # 6e. ARRIVE done -> START
+        a_done = done & (th.phase == ARRIVE)
+        th = th._replace(phase=jnp.where(a_done, START, th.phase))
+
+        # ------------------------------------------------ 7. START new txns
+        st = th.phase == START
+        past = now >= cfg.horizon
+        th = th._replace(phase=jnp.where(st & past, HALT, th.phase))
+        st = st & ~past
+        if c.arrival_rate > 0:
+            interval = max(int(T / c.arrival_rate), 1)
+            arr = th.txn * interval + (tids * 977) % interval
+            early_t = st & (arr > now)
+            th = th._replace(
+                phase=jnp.where(early_t, ARRIVE, th.phase),
+                work=jnp.where(early_t, arr - now, th.work))
+            st = st & ~early_t
+        keys, iswr, dup, nops = gen_txn(w, tids, th.txn)
+        wab = will_abort(w, cfg.p_abort, tids, th.txn)
+        sel = st[:, None]
+        th = th._replace(
+            keys=jnp.where(sel, keys, th.keys),
+            iswr=jnp.where(sel, iswr, th.iswr),
+            dup=jnp.where(sel, dup, th.dup),
+            nops=jnp.where(st, nops, th.nops),
+            willab=jnp.where(st, wab, th.willab),
+            tstart=jnp.where(st & ~th.retry, now, th.tstart),
+            op=jnp.where(st, 0, th.op))
+
+        # ------------------------------------------------ 8. begin next op
+        # Threads entering a new op (fresh txns or op-advance) either take a
+        # ticket (effective write) or execute directly (read / dup write).
+        begin = st | next_op
+        bkey = cur(th.keys, th.op)
+        bwr = cur(th.iswr, th.op) & ~cur(th.dup, th.op)
+        need_ticket = begin & bwr
+        direct = begin & ~bwr
+        rd_cost = jnp.where(cur(th.iswr, th.op), c.op_exec, c.read_exec)
+        th = th._replace(
+            phase=jnp.where(direct, EXEC, th.phase),
+            work=jnp.where(direct, rd_cost, th.work))
+
+        # FIFO ticket assignment with same-tick ranking (sort by key).
+        # Sentinel key R sorts all non-takers after every real key so they
+        # can never interleave (and break the rank chain) of a key run.
+        enc = jnp.where(need_ticket, bkey, I32(R)) * I32(T) + tids
+        order = jnp.argsort(enc)
+        sk = bkey[order]
+        sm = need_ticket[order]
+        same = jnp.concatenate([jnp.zeros((1,), bool),
+                                (sk[1:] == sk[:-1]) & sm[1:] & sm[:-1]])
+        idx = jnp.arange(T)
+        seg_start = jnp.where(~same, idx, 0)
+        seg_start = lax.associative_scan(jnp.maximum, seg_start)
+        rank_sorted = idx - seg_start
+        rank = jnp.zeros((T,), I32).at[order].set(rank_sorted.astype(I32))
+        tkt = jnp.where(need_ticket, rows.nt[bkey] + rank, NOTK)
+        counts = _seg_sum(jnp.ones_like(bkey), bkey, R, need_ticket)
+        rows = rows._replace(nt=rows.nt + counts)
+        th = th._replace(
+            ticket=th.ticket.at[tids, jnp.clip(th.op, 0, L - 1)].set(
+                jnp.where(need_ticket, tkt, cur(th.ticket, th.op))),
+            phase=jnp.where(need_ticket, WAIT, th.phase),
+            wstart=jnp.where(need_ticket, now, th.wstart))
+
+        # ------------------------------------------------ 9. hotspot detect
+        if p.hot_queue:
+            live3 = th.ticket >= 0
+            d3_nwait = _seg_sum(jnp.ones_like(th.ticket), th.keys, R,
+                                live3 & ~th.applied)
+            d3_nlive = _seg_sum(jnp.ones_like(th.ticket), th.keys, R, live3)
+            promote = d3_nwait > p.hot_threshold
+            # demote only when the row is fully quiesced: no waiter AND no
+            # applied-uncommitted update (the dep list must be empty, §4.1)
+            demote = rows.hot & (d3_nlive == 0)
+            rows = rows._replace(
+                hot=(rows.hot | promote) & ~demote,
+                gleader=jnp.where(demote, NOTK, rows.gleader),
+                gcount=jnp.where(demote, 0, rows.gcount))
+
+        return SimState(th, rows, g)
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+def init_state(cfg: EngineConfig) -> SimState:
+    T, L, R = cfg.n_threads, cfg.workload.txn_len, cfg.workload.n_rows
+    th = Threads(
+        phase=jnp.zeros((T,), I32),
+        work=jnp.zeros((T,), I32),
+        op=jnp.zeros((T,), I32),
+        txn=jnp.zeros((T,), I32),
+        tstart=jnp.zeros((T,), I32),
+        wstart=jnp.zeros((T,), I32),
+        willab=jnp.zeros((T,), bool),
+        forced=jnp.zeros((T,), bool),
+        vabort=jnp.zeros((T,), bool),
+        retry=jnp.zeros((T,), bool),
+        keys=jnp.zeros((T, L), I32),
+        iswr=jnp.zeros((T, L), bool),
+        dup=jnp.zeros((T, L), bool),
+        ticket=jnp.full((T, L), NOTK),
+        applied=jnp.zeros((T, L), bool),
+        early=jnp.zeros((T, L), bool),
+        committing=jnp.zeros((T, L), bool),
+        nops=jnp.full((T,), L, I32),
+    )
+    rows = Rows(
+        nt=jnp.zeros((R,), I32),
+        updating=jnp.zeros((R,), bool),
+        hot=jnp.zeros((R,), bool),
+        gleader=jnp.full((R,), NOTK),
+        gcount=jnp.zeros((R,), I32),
+        casc=jnp.full((R,), INF),
+        batch_end=jnp.zeros((R,), I32),
+        batch_n=jnp.zeros((R,), I32),
+        applied_val=jnp.zeros((R,), I32),
+        committed_val=jnp.zeros((R,), I32),
+    )
+    g = Globals(
+        now=jnp.asarray(0, I32),
+        commits=jnp.asarray(0, I32),
+        user_aborts=jnp.asarray(0, I32),
+        forced_aborts=jnp.asarray(0, I32),
+        lock_ops=jnp.asarray(0, I32),
+        wait_ticks=jnp.asarray(0.0, F32),
+        busy_ticks=jnp.asarray(0.0, F32),
+        lat_sum=jnp.asarray(0.0, F32),
+        hist=jnp.zeros((N_HIST,), I32),
+        iters=jnp.asarray(0, I32),
+    )
+    return SimState(th, rows, g)
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def _run(cfg: EngineConfig, s0: SimState) -> SimState:
+    step = _make_step(cfg)
+    stop_time = (cfg.horizon
+                 + 3 * max(cfg.protocol.wait_timeout, cfg.horizon)
+                 if cfg.drain else cfg.horizon)
+
+    def cond(s: SimState):
+        running = ((s.th.phase != HALT).any() & (s.g.now < stop_time)
+                   if cfg.drain else (s.g.now < cfg.horizon))
+        return running & (s.g.iters < cfg.max_iters)
+
+    return lax.while_loop(cond, step, s0)
+
+
+def run_sim(cfg: EngineConfig) -> SimState:
+    """Run a simulation to completion and return the final state."""
+    return _run(cfg, init_state(cfg))
+
+
+def simulate(protocol: str, workload: WorkloadSpec, n_threads: int,
+             costs: CostModel | None = None, horizon: int = 2_000_000,
+             p_abort: float = 0.0, drain: bool = False, seed: int = 0,
+             **proto_over) -> SimState:
+    """Convenience entry point: run one protocol over one workload."""
+    cfg = EngineConfig(
+        protocol=protocol_params(protocol, **proto_over),
+        costs=costs or CostModel(),
+        workload=workload,
+        n_threads=n_threads,
+        horizon=horizon,
+        p_abort=p_abort,
+        drain=drain,
+        seed=seed,
+    )
+    return run_sim(cfg)

@@ -1,0 +1,80 @@
+"""Result extraction for CC-engine simulations."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .engine import SimState, N_HIST, HIST_BASE
+
+TICKS_PER_SEC = 10_000_000  # 1 tick = 0.1us
+
+
+@dataclasses.dataclass
+class SimResult:
+    protocol: str
+    n_threads: int
+    commits: int
+    user_aborts: int
+    forced_aborts: int
+    lock_ops: int
+    sim_seconds: float
+    tps: float
+    mean_latency_us: float
+    p95_latency_us: float
+    p99_latency_us: float
+    lock_wait_frac: float       # share of txn time spent lock-waiting
+    cpu_util: float             # busy thread-ticks / (T * ticks)
+    abort_rate: float
+    iters: int
+
+    def row(self) -> str:
+        return (f"{self.protocol},{self.n_threads},{self.tps:.0f},"
+                f"{self.mean_latency_us:.1f},{self.p95_latency_us:.1f},"
+                f"{self.abort_rate:.4f},{self.lock_ops},"
+                f"{self.cpu_util:.3f},{self.lock_wait_frac:.3f}")
+
+
+def _pct_from_hist(hist: np.ndarray, q: float) -> float:
+    total = hist.sum()
+    if total == 0:
+        return 0.0
+    target = q * total
+    cum = np.cumsum(hist)
+    b = int(np.searchsorted(cum, target))
+    b = min(b, N_HIST - 1)
+    # bucket b holds latencies in [base^b - 1, base^(b+1) - 1) ticks
+    ticks = HIST_BASE ** (b + 0.5)
+    return ticks / 10.0  # -> us
+
+
+def extract(protocol: str, n_threads: int, s: SimState) -> SimResult:
+    g = s.g
+    commits = int(g.commits)
+    aborts = int(g.user_aborts) + int(g.forced_aborts)
+    now = max(int(g.now), 1)
+    sim_s = now / TICKS_PER_SEC
+    hist = np.asarray(g.hist)
+    lat_mean = (float(g.lat_sum) / commits / 10.0) if commits else 0.0
+    total_lat_ticks = max(float(g.lat_sum), 1.0)
+    return SimResult(
+        protocol=protocol,
+        n_threads=n_threads,
+        commits=commits,
+        user_aborts=int(g.user_aborts),
+        forced_aborts=int(g.forced_aborts),
+        lock_ops=int(g.lock_ops),
+        sim_seconds=sim_s,
+        tps=commits / sim_s,
+        mean_latency_us=lat_mean,
+        p95_latency_us=_pct_from_hist(hist, 0.95),
+        p99_latency_us=_pct_from_hist(hist, 0.99),
+        lock_wait_frac=float(g.wait_ticks) / total_lat_ticks,
+        cpu_util=float(g.busy_ticks) / (n_threads * now),
+        abort_rate=aborts / max(commits + aborts, 1),
+        iters=int(g.iters),
+    )
+
+
+CSV_HEADER = ("protocol,threads,tps,mean_lat_us,p95_lat_us,abort_rate,"
+              "lock_ops,cpu_util,lock_wait_frac")

@@ -1,0 +1,186 @@
+"""Workload generators for the concurrency-control engine.
+
+Each workload kind maps a (thread, txn_counter, op_slot) triple to a row key
+and a read/write flag, deterministically, via an integer hash. This keeps the
+engine allocation-free: transactions are (re)generated on the fly when a
+thread starts (or retries) a transaction.
+
+Workload kinds (mirroring the paper's §6.1.1):
+  - ``hotspot_update``  SysBench hotspot update: op 0 writes THE hot row
+                        (key 0); remaining ops hit non-hot keys.
+  - ``hotspot_mix``     SysBench hotspot read/write: Zipf(SF) keys, RW mix.
+  - ``hotspot_scan``    updates dispersed over a small warm set (paper's
+                        multi-hotspot dispersion case).
+  - ``uniform``         uniform keys, RW mix (uniform update / read-only).
+  - ``zipf``            Zipf(SF) keys, all writes (skewness experiment).
+  - ``fit``             FiT-like: op 0 writes a hot account row (Zipf over a
+                        small hot set), op 1 writes a uniform non-hot row
+                        (transaction-record insert).
+  - ``tpcc``            TPC-C-like: op 0 writes warehouse row (W rows),
+                        op 1 writes district row (10 per warehouse),
+                        remaining ops mixed uniform (stock/customer).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+import jax.numpy as jnp
+
+I32 = jnp.int32
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadSpec:
+    kind: str = "hotspot_update"
+    n_rows: int = 8192          # key space (R)
+    txn_len: int = 1            # ops per transaction (TL)
+    write_ratio: float = 1.0    # fraction of non-structural ops that write
+    zipf_s: float = 0.7         # skew factor (SF)
+    n_hot: int = 4              # hot-set size for fit/hotspot_scan
+    n_warehouses: int = 1       # tpcc
+    seed: int = 0
+    reads_lock: bool = False    # SER current reads (locks for reads)
+
+    def __post_init__(self):
+        assert self.txn_len >= 1
+        assert self.kind in (
+            "hotspot_update", "hotspot_mix", "hotspot_scan",
+            "uniform", "zipf", "fit", "tpcc",
+        )
+
+
+# ---------------------------------------------------------------------------
+# integer hashing (splitmix32-style) — cheap, deterministic, vectorizable
+# ---------------------------------------------------------------------------
+
+def _hash_u32(x: jnp.ndarray) -> jnp.ndarray:
+    """splitmix32 finalizer over uint32."""
+    x = x.astype(jnp.uint32)
+    x = (x ^ (x >> 16)) * jnp.uint32(0x7FEB352D)
+    x = (x ^ (x >> 15)) * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x
+
+
+def _hash3(a, b, c, salt: int) -> jnp.ndarray:
+    h = _hash_u32(a.astype(jnp.uint32) * jnp.uint32(0x9E3779B9)
+                  + jnp.uint32(salt))
+    h = _hash_u32(h ^ (b.astype(jnp.uint32) * jnp.uint32(0x85EBCA6B)))
+    h = _hash_u32(h ^ (c.astype(jnp.uint32) * jnp.uint32(0xC2B2AE35)))
+    return h
+
+
+def _uniform01(h: jnp.ndarray) -> jnp.ndarray:
+    return h.astype(jnp.float32) * jnp.float32(1.0 / 4294967296.0)
+
+
+def zipf_cdf(n: int, s: float) -> np.ndarray:
+    """CDF of a Zipf(s) distribution over keys [0, n)."""
+    ranks = np.arange(1, n + 1, dtype=np.float64)
+    w = ranks ** (-float(s)) if s > 0 else np.ones_like(ranks)
+    cdf = np.cumsum(w / w.sum())
+    cdf[-1] = 1.0
+    return cdf.astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# transaction generation
+# ---------------------------------------------------------------------------
+
+def gen_txn(spec: WorkloadSpec, thread_ids: jnp.ndarray, txn_ctr: jnp.ndarray):
+    """Generate transaction programs for every thread.
+
+    Args:
+      spec: workload spec (static).
+      thread_ids: (T,) int32.
+      txn_ctr: (T,) int32 per-thread transaction counter.
+
+    Returns:
+      keys:  (T, L) int32 row keys.
+      iswr:  (T, L) bool write flags.
+      dup:   (T, L) bool — key already appears earlier in the same txn
+             (re-entrant access: no new ticket needed).
+      nops:  (T,) int32 — ops in this txn (== L for all current kinds).
+    """
+    L = spec.txn_len
+    T = thread_ids.shape[0]
+    tid = thread_ids[:, None]
+    ctr = txn_ctr[:, None]
+    slot = jnp.arange(L, dtype=I32)[None, :]
+
+    base = tid * I32(1_000_003) + ctr
+    hk = _hash3(base, slot, jnp.zeros_like(slot), spec.seed * 7 + 1)
+    hw = _hash3(base, slot, jnp.ones_like(slot), spec.seed * 7 + 2)
+    u_key = _uniform01(hk)
+    u_wr = _uniform01(hw)
+
+    R = spec.n_rows
+    kind = spec.kind
+
+    def zipf_keys(u):
+        cdf = jnp.asarray(zipf_cdf(R, spec.zipf_s))
+        return jnp.searchsorted(cdf, u).astype(I32).clip(0, R - 1)
+
+    def uniform_keys(u, lo=0, hi=None):
+        hi = R if hi is None else hi
+        return (lo + (u * (hi - lo)).astype(I32)).clip(lo, hi - 1)
+
+    wr = u_wr < spec.write_ratio
+
+    if kind == "hotspot_update":
+        # op 0: THE hot row; others: uniform non-hot.
+        k_rest = uniform_keys(u_key, lo=1)
+        keys = jnp.where(slot == 0, I32(0), k_rest)
+        iswr = jnp.where(slot == 0, True, wr)
+    elif kind == "hotspot_mix":
+        keys = zipf_keys(u_key)
+        iswr = wr
+    elif kind == "hotspot_scan":
+        keys = uniform_keys(u_key, lo=0, hi=max(spec.n_hot * 16, 2))
+        iswr = jnp.ones_like(wr)
+    elif kind == "uniform":
+        keys = uniform_keys(u_key)
+        iswr = wr
+    elif kind == "zipf":
+        keys = zipf_keys(u_key)
+        iswr = jnp.ones_like(wr)
+    elif kind == "fit":
+        # op 0: hot account (zipf over n_hot); op 1: uniform insert; rest mix.
+        hot = uniform_keys(u_key, lo=0, hi=spec.n_hot)
+        rest = uniform_keys(u_key, lo=spec.n_hot)
+        keys = jnp.where(slot == 0, hot, rest)
+        iswr = jnp.where(slot <= 1, True, wr)
+    elif kind == "tpcc":
+        W = spec.n_warehouses
+        wh = uniform_keys(u_key, lo=0, hi=W)
+        dist = W + wh * 10 + uniform_keys(u_wr, lo=0, hi=10)
+        rest = uniform_keys(u_key, lo=W * 11)
+        keys = jnp.where(slot == 0, wh, jnp.where(slot == 1, dist, rest))
+        iswr = jnp.where(slot <= 1, True, wr)
+    else:  # pragma: no cover
+        raise ValueError(kind)
+
+    if spec.reads_lock:
+        iswr = jnp.ones_like(iswr)
+
+    # dup[i] = key i seen at an earlier slot (re-entrant lock).
+    eq = keys[:, :, None] == keys[:, None, :]            # (T, L, L)
+    earlier = jnp.tril(jnp.ones((L, L), dtype=bool), k=-1)[None]
+    dup = jnp.any(eq & earlier & iswr[:, None, :], axis=2) & iswr
+    # A read slot never takes a ticket; only writes matter for dup.
+
+    nops = jnp.full((T,), L, dtype=I32)
+    return keys.astype(I32), iswr, dup, nops
+
+
+def will_abort(spec: WorkloadSpec, p_abort: float,
+               thread_ids: jnp.ndarray, txn_ctr: jnp.ndarray) -> jnp.ndarray:
+    """Deterministic per-transaction injected-abort decision (Fig. 10)."""
+    if p_abort <= 0.0:
+        return jnp.zeros_like(thread_ids, dtype=bool)
+    h = _hash3(thread_ids * I32(1_000_003) + txn_ctr,
+               jnp.zeros_like(thread_ids), jnp.zeros_like(thread_ids),
+               spec.seed * 7 + 5)
+    return _uniform01(h) < p_abort

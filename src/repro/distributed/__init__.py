@@ -1,0 +1,14 @@
+from .sharding import (RULES, ResolveReport, resolve_spec, param_shardings,
+                       param_pspecs, batch_pspec, batch_shardings,
+                       cache_shardings, data_axes, scalar_sharding)
+from .fault import (HeartbeatMonitor, reshard_plan, plan_recovery,
+                    RecoveryDecision)
+from .straggler import StragglerDetector, rebalance
+
+__all__ = [
+    "RULES", "ResolveReport", "resolve_spec", "param_shardings",
+    "param_pspecs", "batch_pspec", "batch_shardings", "cache_shardings",
+    "data_axes", "scalar_sharding",
+    "HeartbeatMonitor", "reshard_plan", "plan_recovery", "RecoveryDecision",
+    "StragglerDetector", "rebalance",
+]

@@ -1,0 +1,250 @@
+"""Logical-axis sharding rule resolver.
+
+Parameters carry logical axis names (see models/common.py). The resolver
+maps each logical axis to mesh axes according to an ordered candidate list,
+enforcing (a) divisibility of the dimension by the mesh-axis product and
+(b) no mesh axis consumed twice within one tensor. Fallback is replication
+— every fallback is recorded so the dry-run can report degraded shardings.
+
+Rule sets:
+  * ``train``: FSDP+TP — width axes shard over "model" (TP); depth axes
+    ("embed", "vocab") also shard over "data" (+"pod"), fully sharding
+    parameters and optimizer state (ZeRO-3 semantics via XLA all-gathers).
+  * ``serve``: TP only — weights replicated over "data" (batch axis),
+    sharded over "model"; no per-step all-gathers of weights.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import is_spec, tree_map_specs
+from repro.models.attention import KVCache, MLACache
+from repro.models.rglru import RGLRUState
+from repro.models.ssd import SSDState
+
+# logical axis -> ordered candidates (each candidate = tuple of mesh axes)
+RULES = {
+    "train": {
+        "embed": (("data",), ()),
+        "mlp": (("model",), ()),
+        "heads": (("model",), ()),
+        "kv": (("model",), ()),
+        "vocab": (("data", "model"), ("model",), ("data",), ()),
+        "experts": (("model",), ()),
+        "lru": (("model",), ()),
+        "state": (("model",), ()),
+        "layers": ((),),
+    },
+    # pure data-parallel training (replicated params): for sub-1B models
+    # the FSDP all-gathers cost more than they save — grads all-reduce
+    # once instead (hillclimb H1 on the collective-bound cells).
+    "train_dp": {
+        "embed": ((),),
+        "mlp": (("model",), ()),
+        "heads": (("model",), ()),
+        "kv": (("model",), ()),
+        "vocab": (("model",), ()),
+        "experts": (("model",), ()),
+        "lru": (("model",), ()),
+        "state": (("model",), ()),
+        "layers": ((),),
+    },
+    "serve": {
+        "embed": ((),),
+        # second candidate: when "model" is consumed (expert axis), spread
+        # the ff dim over "data" — this is what fits arctic-480b weights
+        # (960 GB bf16) on a 256-chip pod at serve time.
+        "mlp": (("model",), ("data",), ()),
+        "heads": (("model",), ()),
+        "kv": (("model",), ()),
+        "vocab": (("model",), ()),
+        "experts": (("model",), ()),
+        "lru": (("model",), ()),
+        "state": (("model",), ()),
+        "layers": ((),),
+    },
+}
+
+
+@dataclasses.dataclass
+class ResolveReport:
+    fallbacks: list = dataclasses.field(default_factory=list)
+
+    def note(self, shape, axes, axis, wanted):
+        self.fallbacks.append((tuple(shape), tuple(axes), axis, wanted))
+
+
+def _axis_size(mesh: Mesh, names: Sequence[str]) -> int:
+    return int(np.prod([mesh.shape[n] for n in names])) if names else 1
+
+
+def resolve_spec(shape, axes, mesh: Mesh, rules,
+                 report: Optional[ResolveReport] = None) -> P:
+    """Resolve one tensor's logical axes to a PartitionSpec."""
+    used: set = set()
+    out = []
+    for dim, ax in zip(shape, axes):
+        placed = None
+        if ax is not None and ax in rules:
+            for cand in rules[ax]:
+                cand = tuple(c for c in cand if c in mesh.shape)
+                if any(c in used for c in cand):
+                    continue
+                if cand and dim % _axis_size(mesh, cand) == 0:
+                    placed = cand
+                    break
+                if not cand:
+                    placed = ()
+                    break
+            if placed is None:
+                placed = ()
+            if placed == () and rules[ax][0] != () and report is not None:
+                report.note(shape, axes, ax, rules[ax][0])
+        out.append(placed if placed else None)
+        if placed:
+            used.update(placed)
+    # collapse single-axis tuples for readability
+    out = [o[0] if (isinstance(o, tuple) and len(o) == 1) else o for o in out]
+    return P(*out)
+
+
+def param_shardings(specs, mesh: Mesh, mode: str = "train",
+                    report: Optional[ResolveReport] = None):
+    """NamedSharding tree for a ParamSpec tree."""
+    rules = RULES[mode]
+
+    def f(s):
+        return NamedSharding(mesh, resolve_spec(s.shape, s.axes, mesh,
+                                                rules, report))
+    return tree_map_specs(f, specs)
+
+
+def param_pspecs(specs, mesh: Mesh, mode: str = "train"):
+    rules = RULES[mode]
+    return tree_map_specs(
+        lambda s: resolve_spec(s.shape, s.axes, mesh, rules), specs)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache shardings
+# ---------------------------------------------------------------------------
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """All data-parallel mesh axes ("pod" included when present)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def batch_pspec(mesh: Mesh, ndim: int, batch_dim: int = 0) -> P:
+    spec = [None] * ndim
+    spec[batch_dim] = data_axes(mesh)
+    return P(*spec)
+
+
+def batch_shardings(tree, mesh: Mesh, batch_dims=None):
+    """Shard the batch dim of every array-like leaf over the data axes.
+
+    ``batch_dims``: optional dict key->dim for dict trees whose batch axis
+    is not 0 (e.g. "positions3" with shape (3, B, S) has batch dim 1).
+    """
+    batch_dims = batch_dims or {}
+
+    def f(path, leaf):
+        bd = 0
+        for entry in path:
+            key = getattr(entry, "key", None)
+            if key in batch_dims:
+                bd = batch_dims[key]
+        da = data_axes(mesh)
+        if leaf.shape[bd] % max(_axis_size(mesh, da), 1):
+            return NamedSharding(mesh, P())          # tiny batch: replicate
+        return NamedSharding(mesh, batch_pspec(mesh, len(leaf.shape), bd))
+    return jax.tree_util.tree_map_with_path(f, tree)
+
+
+# candidate "model"-axis dims per cache leaf (stacked layout with leading
+# layers axis), in preference order. head_dim / latent dims are never
+# sharded (they are contracting dims of attention).
+_CACHE_PREF = {
+    "k": (3, 2),      # (L, B, S, K, D): kv heads, else sequence
+    "v": (3, 2),
+    "ckv": (2,),      # (L, B, S, R): sequence only (latent contracts)
+    "krope": (),      # tiny; replicate
+    "h": (2,),        # rglru (L,B,W) width / ssd (L,B,H,P,N) heads
+    "conv": (3,),     # (L, B, cw-1, C): channels
+}
+
+
+def _cache_leaf_pspec(mesh: Mesh, name: str, leaf_shape, stacked: bool) -> P:
+    da = data_axes(mesh)
+    dsz = _axis_size(mesh, da)
+    msz = mesh.shape.get("model", 1)
+    nd = len(leaf_shape)
+    lead = 1 if stacked else 0          # batch axis position
+    spec: list = [None] * nd
+    if leaf_shape[lead] % max(dsz, 1) == 0 and dsz > 1:
+        spec[lead] = da                  # batch axis (replicate if B==1)
+    for c in _CACHE_PREF.get(name, ()):
+        i = c if stacked else c - 1
+        if i <= lead or i >= nd:
+            continue
+        if leaf_shape[i] % msz == 0 and leaf_shape[i] >= msz:
+            spec[i] = "model"
+            break
+    return P(*spec)
+
+
+def cache_shardings(cache_tree, mesh: Mesh, stacked: bool = True):
+    def f(path, leaf):
+        name = None
+        for entry in reversed(path):
+            key = getattr(entry, "name", None) or getattr(entry, "key", None)
+            if key is not None:
+                name = str(key)
+                break
+        return NamedSharding(
+            mesh, _cache_leaf_pspec(mesh, name, leaf.shape, stacked))
+    return jax.tree_util.tree_map_with_path(f, cache_tree)
+
+
+def scalar_sharding(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# activation annotations (set by launchers; no-op without a mesh)
+# ---------------------------------------------------------------------------
+
+_ACT_MESH: list = [None]
+
+
+def set_activation_mesh(mesh: Optional[Mesh]):
+    """Launchers set this so model code can annotate activations. Model
+    code stays mesh-agnostic; tests on 1 device leave it unset (no-op)."""
+    _ACT_MESH[0] = mesh
+
+
+def annotate(x, *dims):
+    """Constrain activation sharding. dims: "batch" | "model" | None per
+    axis. No-op unless a launcher installed a mesh (and the dim divides).
+    """
+    mesh = _ACT_MESH[0]
+    if mesh is None:
+        return x
+    spec = []
+    for d, size in zip(dims, x.shape):
+        if d == "batch":
+            da = data_axes(mesh)
+            ok = da and size % _axis_size(mesh, da) == 0
+            spec.append(da if ok else None)
+        elif d == "model":
+            ok = "model" in mesh.shape and size % mesh.shape["model"] == 0
+            spec.append("model" if ok else None)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

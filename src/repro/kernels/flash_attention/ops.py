@@ -1,0 +1,29 @@
+"""Jitted wrapper: (B, S, H, D) layout adapter around the Pallas kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_bhsd, DEF_BQ, DEF_BK
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "scale",
+                                             "interpret"))
+def flash_attention(q, k, v, causal=True, scale=None, interpret=True):
+    """q: (B, Sq, H, D); k/v: (B, Sk, K, D). Returns (B, Sq, H, D) f32."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    # pick block sizes that divide the (possibly small) sequence
+    def pick(s, pref):
+        b = min(pref, s)
+        while s % b:
+            b -= 1
+        return b
+    bq = pick(qt.shape[2], DEF_BQ)
+    bk = pick(kt.shape[2], DEF_BK)
+    out = flash_attention_bhsd(qt, kt, vt, causal=causal, scale=scale,
+                               bq=bq, bk=bk, interpret=interpret)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the flash attention kernel (GQA-aware)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  causal: bool = True, scale: float | None = None):
+    """q: (B, Sq, H, D); k/v: (B, Sk, K, D) with H % K == 0.
+    Returns (B, Sq, H, D) in f32."""
+    B, Sq, H, D = q.shape
+    K = k.shape[2]
+    G = H // K
+    scale = scale if scale is not None else D ** -0.5
+    qf = q.astype(jnp.float32).reshape(B, Sq, K, G, D)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qf, k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, k.shape[1]), bool),
+                        k=k.shape[1] - Sq)
+        s = jnp.where(mask[None, None, None], s, -2e38)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", w, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, D)

@@ -1,0 +1,6 @@
+from .kernel import segment_sums
+from .ops import grouped_scatter_apply
+from .ref import segment_sums_ref, grouped_apply_ref
+
+__all__ = ["segment_sums", "grouped_scatter_apply", "segment_sums_ref",
+           "grouped_apply_ref"]

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the grouped conflict-update kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_sums_ref(seg_ids: jnp.ndarray, updates: jnp.ndarray,
+                     num_groups: int) -> jnp.ndarray:
+    """seg_ids: (N,) i32 sorted group index per row; updates: (N, D) f32.
+    Returns (num_groups, D) per-group sums."""
+    return jax.ops.segment_sum(updates.astype(jnp.float32), seg_ids,
+                               num_segments=num_groups)
+
+
+def grouped_apply_ref(table: jnp.ndarray, ids: jnp.ndarray,
+                      updates: jnp.ndarray) -> jnp.ndarray:
+    """End-to-end oracle: the serialized duplicate-index scatter (what the
+    paper calls 2PL) — the grouped kernel must match this bit-for-bit in
+    f32."""
+    return table.at[ids].add(updates.astype(table.dtype), mode="drop")

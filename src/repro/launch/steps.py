@@ -1,0 +1,44 @@
+"""Step functions lowered by the dry-run and driven by train.py/serve.py."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import loss_fn, decode_step, prefill
+from repro.optim import adamw
+
+
+def make_train_step(cfg, opt_cfg: adamw.AdamWConfig, use_kernel=False):
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch, use_kernel=use_kernel),
+            has_aux=True)(params)
+        new_params, new_opt, om = adamw.apply(opt_cfg, grads, opt_state,
+                                              params)
+        return new_params, new_opt, {"loss": loss, **metrics, **om}
+    return train_step
+
+
+def make_prefill_step(cfg, use_kernel=False):
+    def prefill_step(params, inputs):
+        logits, caches = prefill(params, cfg,
+                                 tokens=inputs.get("tokens"),
+                                 embeds=inputs.get("embeds"),
+                                 positions3=inputs.get("positions3"),
+                                 use_kernel=use_kernel)
+        return logits, caches
+    return prefill_step
+
+
+def make_serve_step(cfg):
+    def serve_step(params, inputs):
+        logits, caches = decode_step(
+            params, cfg,
+            tokens=inputs.get("tokens"),
+            embeds=inputs.get("embeds"),
+            caches=inputs["caches"],
+            pos=inputs["pos"],
+            positions3=inputs.get("positions3"))
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return nxt, caches
+    return serve_step

@@ -1,0 +1,14 @@
+"""Model substrate: functional layers, mixers, and LM assembly."""
+from .common import (ParamSpec, spec, init_params, abstract_params,
+                     param_axes, stack_specs, count_params, is_spec,
+                     tree_map_specs)
+from .lm import lm_spec, forward, loss_fn, prefill, decode_step, LMOutput
+from .transformer import (lm_cache_shapes, lm_init_cache, block_spec,
+                          block_apply)
+
+__all__ = [
+    "ParamSpec", "spec", "init_params", "abstract_params", "param_axes",
+    "stack_specs", "count_params", "is_spec", "tree_map_specs",
+    "lm_spec", "forward", "loss_fn", "prefill", "decode_step", "LMOutput",
+    "lm_cache_shapes", "lm_init_cache", "block_spec", "block_apply",
+]

@@ -1,0 +1,319 @@
+"""Attention mixers: GQA (global + sliding-window) and MLA (DeepSeek-V2).
+
+Modes:
+  * ``train`` / ``prefill``: full-sequence causal attention (optionally
+    sliding-window). Prefill additionally returns the KV cache.
+  * ``decode``: one query token against a cache. Sliding-window layers use a
+    **ring-buffer cache** of ``window`` slots (this is what makes gemma3 /
+    recurrentgemma long_500k decodes memory-feasible); global layers keep
+    the full context. MLA decodes through the **absorbed** formulation
+    (scores and values in the 512-d latent space; the per-head K/V
+    up-projections are folded into the query / output projections), so the
+    latent cache is never expanded at decode time.
+
+The dense-path attention math is also available as a Pallas flash kernel
+(``repro.kernels.flash_attention``); `use_kernel` switches (tests compare
+both).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import spec
+from .layers import apply_rope, apply_mrope
+
+NEG_INF = -2.0e38
+
+
+# ===========================================================================
+# GQA
+# ===========================================================================
+
+def gqa_spec(cfg):
+    d, hd = cfg.d_model, cfg.hd
+    s = {
+        "wq": spec((d, cfg.n_heads * hd), ("embed", "heads")),
+        "wk": spec((d, cfg.n_kv_heads * hd), ("embed", "kv")),
+        "wv": spec((d, cfg.n_kv_heads * hd), ("embed", "kv")),
+        "wo": spec((cfg.n_heads * hd, d), ("heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = spec((cfg.n_heads * hd,), ("heads",), init="zeros")
+        s["bk"] = spec((cfg.n_kv_heads * hd,), ("kv",), init="zeros")
+        s["bv"] = spec((cfg.n_kv_heads * hd,), ("kv",), init="zeros")
+    return s
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray        # (B, S_cache, K, D)
+    v: jnp.ndarray        # (B, S_cache, K, D)
+
+
+def gqa_cache_len(cfg, kind: str, seq_len: int) -> int:
+    return min(seq_len, cfg.window) if kind == "local" else seq_len
+
+
+def _qkv(p, x, cfg):
+    B, S, _ = x.shape
+    hd = cfg.hd
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(B, S, cfg.n_heads, hd)
+    k = k.reshape(B, S, cfg.n_kv_heads, hd)
+    v = v.reshape(B, S, cfg.n_kv_heads, hd)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, scale):
+    """Grouped scaled-dot-product attention. q: (B,Sq,H,Dk); k: (B,Sk,K,Dk);
+    v: (B,Sk,K,Dv) (Dv may differ — MLA).
+
+    mask: broadcastable to (B, 1, Sq, Sk) (True = attend).
+    """
+    B, Sq, H, D = q.shape
+    K = k.shape[2]
+    Dv = v.shape[3]
+    G = H // K
+    q = q.reshape(B, Sq, K, G, D)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    scores = jnp.where(mask[:, :, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H * Dv)
+
+
+def _causal_mask(Sq, Sk, window: Optional[int] = None, offset: int = 0):
+    """(Sq, Sk) mask; offset = (#k positions preceding the q block)."""
+    qpos = jnp.arange(Sq)[:, None] + offset
+    kpos = jnp.arange(Sk)[None, :]
+    m = kpos <= qpos
+    if window is not None:
+        m &= kpos > qpos - window
+    return m
+
+
+def _sdpa_chunked(q, k, v, scale, window: Optional[int], chunk: int):
+    """Query-block-chunked causal attention: the (Sq, Sk) score matrix
+    exists one (chunk, Sk) slab at a time; the slab is rematerialized in
+    the backward pass (jax.checkpoint) — flash attention's memory behavior
+    expressed at the XLA level (the Pallas kernel is the TPU-native
+    version; this path is what the SPMD dry-run lowers).
+    """
+    B, Sq, H, D = q.shape
+    assert Sq % chunk == 0, (Sq, chunk)
+    nb = Sq // chunk
+    qb = q.reshape(B, nb, chunk, H, D).swapaxes(0, 1)   # (nb, B, c, H, D)
+
+    @jax.checkpoint
+    def body(carry, args):
+        qi, blk = args
+        mask = (_causal_mask(chunk, k.shape[1], window,
+                             offset=qi * chunk))[None, None]
+        out = _sdpa(blk, k, v, mask, scale)             # (B, c, H*D)
+        return carry, out
+
+    _, outs = jax.lax.scan(body, (),
+                           (jnp.arange(nb, dtype=jnp.int32), qb))
+    return outs.swapaxes(0, 1).reshape(B, Sq, outs.shape[-1])
+
+
+def _pad_seq(arr, target: int, axis: int = 1):
+    if arr.shape[axis] >= target:
+        return arr
+    pad = [(0, 0)] * arr.ndim
+    pad[axis] = (0, target - arr.shape[axis])
+    return jnp.pad(arr, pad)
+
+
+def gqa_attend(p, x, cfg, kind: str, mode: str,
+               positions=None, cache: Optional[KVCache] = None,
+               pos=None, positions3=None, use_kernel: bool = False,
+               max_len: Optional[int] = None):
+    """Returns (out, new_cache|None). ``max_len``: prefill cache capacity
+    (a serving runtime preallocates room for the tokens to be decoded)."""
+    B, S, _ = x.shape
+    hd = cfg.hd
+    scale = hd ** -0.5
+    window = cfg.window if kind == "local" else None
+
+    if mode in ("train", "prefill"):
+        q, k, v = _qkv(p, x, cfg)
+        if positions is None:
+            positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+        if cfg.mrope and positions3 is not None:
+            q = apply_mrope(q, positions3, cfg.rope_theta)
+            k = apply_mrope(k, positions3, cfg.rope_theta)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+        if use_kernel and window is None:
+            from repro.kernels.flash_attention.ops import flash_attention
+            out = flash_attention(q, k, v, causal=True, scale=scale)
+            out = out.reshape(B, S, cfg.n_heads * hd)
+        elif cfg.attn_chunk and S > cfg.attn_chunk:
+            out = _sdpa_chunked(q, k, v, scale, window, cfg.attn_chunk)
+        else:
+            mask = _causal_mask(S, S, window)[None, None]
+            out = _sdpa(q, k, v, mask, scale)
+        out = jnp.einsum("bsh,hd->bsd", out.astype(x.dtype),
+                         p["wo"].astype(x.dtype))
+        new_cache = None
+        if mode == "prefill":
+            cap = gqa_cache_len(cfg, kind, max_len or S)
+            cl = min(gqa_cache_len(cfg, kind, S), cap)
+            kt, vt = k[:, -cl:], v[:, -cl:]
+            if window is not None and cl == window:
+                # ring order: absolute position p lives at slot p % window
+                kt = jnp.roll(kt, shift=S % window, axis=1)
+                vt = jnp.roll(vt, shift=S % window, axis=1)
+            new_cache = KVCache(k=_pad_seq(kt, cap), v=_pad_seq(vt, cap))
+        return out, new_cache
+
+    # ----------------------------------------------------------- decode
+    assert cache is not None and pos is not None
+    q, k, v = _qkv(p, x, cfg)                    # S == 1
+    posb = jnp.broadcast_to(pos, (B,))[:, None]
+    if cfg.mrope and positions3 is not None:
+        q = apply_mrope(q, positions3, cfg.rope_theta)
+        k = apply_mrope(k, positions3, cfg.rope_theta)
+    else:
+        q = apply_rope(q, posb, cfg.rope_theta)
+        k = apply_rope(k, posb, cfg.rope_theta)
+    Sc = cache.k.shape[1]
+    slot = (pos % Sc).astype(jnp.int32)
+    # write the single new position at `slot`
+    nk = cache.k.at[:, slot].set(k[:, 0].astype(cache.k.dtype))
+    nv = cache.v.at[:, slot].set(v[:, 0].astype(cache.v.dtype))
+    kpos = jnp.arange(Sc, dtype=jnp.int32)
+    if window is None:
+        valid = kpos <= pos
+    else:
+        # ring buffer: slot i holds absolute position with i = abs % Sc
+        abs_pos = pos - ((slot - kpos) % Sc)
+        valid = (abs_pos >= 0) & (abs_pos >= pos - window + 1)
+    mask = valid[None, None, None, :]
+    out = _sdpa(q, nk, nv, mask[:, 0], scale)
+    out = jnp.einsum("bsh,hd->bsd", out.astype(x.dtype),
+                     p["wo"].astype(x.dtype))
+    return out, KVCache(k=nk, v=nv)
+
+
+# ===========================================================================
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ===========================================================================
+
+def mla_spec(cfg):
+    d = cfg.d_model
+    H = cfg.n_heads
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    return {
+        "wq": spec((d, H * qk), ("embed", "heads")),
+        "w_dkv": spec((d, cfg.kv_lora_rank + cfg.qk_rope_dim),
+                      ("embed", "state")),
+        "kv_norm": spec((cfg.kv_lora_rank,), (None,), init="ones"),
+        "w_uk": spec((cfg.kv_lora_rank, H * cfg.qk_nope_dim),
+                     ("state", "heads")),
+        "w_uv": spec((cfg.kv_lora_rank, H * cfg.v_head_dim),
+                     ("state", "heads")),
+        "wo": spec((H * cfg.v_head_dim, d), ("heads", "embed")),
+    }
+
+
+class MLACache(NamedTuple):
+    ckv: jnp.ndarray      # (B, S, kv_lora_rank)
+    krope: jnp.ndarray    # (B, S, qk_rope_dim)
+
+
+def _mla_qkv_latent(p, x, cfg):
+    B, S, _ = x.shape
+    H, dn, dr = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(x.dtype))
+    q = q.reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    dkv = jnp.einsum("bsd,dh->bsh", x, p["w_dkv"].astype(x.dtype))
+    ckv, krope = dkv[..., :cfg.kv_lora_rank], dkv[..., cfg.kv_lora_rank:]
+    # RMS-normalize the latent (as in DeepSeek-V2)
+    var = jnp.mean(jnp.square(ckv.astype(jnp.float32)), -1, keepdims=True)
+    ckv = (ckv.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6)
+           * p["kv_norm"].astype(jnp.float32)).astype(x.dtype)
+    return q_nope, q_rope, ckv, krope
+
+
+def mla_attend(p, x, cfg, mode: str, positions=None,
+               cache: Optional[MLACache] = None, pos=None,
+               max_len: Optional[int] = None):
+    B, S, _ = x.shape
+    H, dn, dr, dv = (cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim,
+                     cfg.v_head_dim)
+    R = cfg.kv_lora_rank
+    scale = (dn + dr) ** -0.5
+    q_nope, q_rope, ckv, krope = _mla_qkv_latent(p, x, cfg)
+
+    if mode in ("train", "prefill"):
+        if positions is None:
+            positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+        q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+        krope_r = apply_rope(krope[:, :, None, :], positions,
+                             cfg.rope_theta)[:, :, 0]
+        k_nope = jnp.einsum("bsr,rh->bsh", ckv,
+                            p["w_uk"].astype(x.dtype)).reshape(B, S, H, dn)
+        v = jnp.einsum("bsr,rh->bsh", ckv,
+                       p["w_uv"].astype(x.dtype)).reshape(B, S, H, dv)
+        # concat trick: [q_nope; q_rope] . [k_nope; k_rope] — one GQA-style
+        # attention (K == H), so the chunked path is shared.
+        q_cat = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k_cat = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(krope_r[:, :, None, :],
+                                      (B, S, H, dr)).astype(k_nope.dtype)],
+            axis=-1)
+        if cfg.attn_chunk and S > cfg.attn_chunk:
+            out = _sdpa_chunked(q_cat, k_cat, v, scale, None,
+                                cfg.attn_chunk)
+        else:
+            mask = _causal_mask(S, S)[None, None]
+            out = _sdpa(q_cat, k_cat, v, mask, scale)
+        out = jnp.einsum("bsh,hd->bsd", out.astype(x.dtype),
+                         p["wo"].astype(x.dtype))
+        new_cache = None
+        if mode == "prefill":
+            cap = max_len or S
+            new_cache = MLACache(ckv=_pad_seq(ckv, cap),
+                                 krope=_pad_seq(krope_r, cap))
+        return out, new_cache
+
+    # -------------------------------------------------- decode (absorbed)
+    assert cache is not None and pos is not None
+    posb = jnp.broadcast_to(pos, (B,))[:, None]
+    q_rope = apply_rope(q_rope, posb, cfg.rope_theta)
+    krope_r = apply_rope(krope[:, :, None, :], posb, cfg.rope_theta)[:, :, 0]
+    nckv = cache.ckv.at[:, pos].set(ckv[:, 0].astype(cache.ckv.dtype))
+    nkrope = cache.krope.at[:, pos].set(krope_r[:, 0].astype(
+        cache.krope.dtype))
+    Sc = nckv.shape[1]
+    # absorb W_uk into the query: q_lat (B,1,H,R)
+    w_uk = p["w_uk"].reshape(R, H, dn)
+    q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    scores = (jnp.einsum("bqhr,bsr->bhqs", q_lat,
+                         nckv.astype(jnp.float32))
+              + jnp.einsum("bqhd,bsd->bhqs", q_rope.astype(jnp.float32),
+                           nkrope.astype(jnp.float32))) * scale
+    valid = jnp.arange(Sc, dtype=jnp.int32) <= pos
+    scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhqs,bsr->bqhr", w, nckv.astype(jnp.float32))
+    w_uv = p["w_uv"].reshape(R, H, dv)
+    out = jnp.einsum("bqhr,rhd->bqhd", ctx, w_uv.astype(jnp.float32))
+    out = out.reshape(B, 1, H * dv)
+    out = jnp.einsum("bsh,hd->bsd", out.astype(x.dtype),
+                     p["wo"].astype(x.dtype))
+    return out, MLACache(ckv=nckv, krope=nkrope)

@@ -1,0 +1,94 @@
+"""Parameter-spec system: one tree of ``ParamSpec`` drives initialization,
+abstract (dry-run) instantiation, and sharding resolution.
+
+Logical axis names used across the framework (resolved to mesh axes by
+``repro.distributed.sharding``):
+
+  "embed"    model width (d_model)
+  "heads"    flattened attention head dim (n_heads * head_dim)
+  "kv"       flattened kv head dim
+  "mlp"      FFN hidden
+  "vocab"    vocabulary rows
+  "experts"  MoE expert axis
+  "lru"      RG-LRU width / SSD inner channels
+  "state"    SSM state / MLA latent
+  None       never sharded (biases, norms, small vectors)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "dense"      # dense | embed | zeros | ones | value
+    value: float = 0.0       # for init == "value"
+    fan_in_axes: Tuple[int, ...] = (0,)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def spec(shape, axes, init="dense", value=0.0, fan_in_axes=(0,)) -> ParamSpec:
+    return ParamSpec(tuple(shape), tuple(axes), init, value,
+                     tuple(fan_in_axes))
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_map_specs(f: Callable[[ParamSpec], Any], specs):
+    return jax.tree.map(f, specs, is_leaf=is_spec)
+
+
+def _init_one(s: ParamSpec, key, dtype) -> jnp.ndarray:
+    if s.init == "zeros":
+        return jnp.zeros(s.shape, dtype)
+    if s.init == "ones":
+        return jnp.ones(s.shape, dtype)
+    if s.init == "value":
+        return jnp.full(s.shape, s.value, dtype)
+    fan_in = max(int(np.prod([s.shape[a] for a in s.fan_in_axes])), 1)
+    scale = 1.0 if s.init == "embed" else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, s.shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def init_params(specs, key, dtype=jnp.float32):
+    """Materialize a spec tree into concrete parameters."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_one(s, k, dtype) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(specs, dtype=jnp.float32):
+    """ShapeDtypeStruct tree — used by the dry-run (no allocation)."""
+    return tree_map_specs(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype), specs)
+
+
+def param_axes(specs):
+    """Tree of logical-axis tuples, parallel to the param tree."""
+    return tree_map_specs(lambda s: s.axes, specs)
+
+
+def stack_specs(specs, n: int, axis_name: Optional[str] = None):
+    """Stack a spec tree along a new leading axis (scanned layer groups)."""
+    return tree_map_specs(
+        lambda s: ParamSpec((n,) + s.shape, (axis_name,) + s.axes, s.init,
+                            s.value, tuple(a + 1 for a in s.fan_in_axes)),
+        specs)
+
+
+def count_params(specs) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=is_spec)
+    return int(sum(int(np.prod(s.shape)) for s in leaves))

@@ -1,0 +1,112 @@
+"""Shared layers: norms, dense/SwiGLU MLP, rotary embeddings (+M-RoPE)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import spec
+
+
+# -------------------------------------------------------------- RMSNorm
+
+def rmsnorm_spec(d: int):
+    return {"scale": spec((d,), (None,), init="ones")}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return out.astype(dt)
+
+
+# -------------------------------------------------------------- MLP (GLU)
+
+def mlp_spec(d: int, ff: int):
+    return {
+        "wi_gate": spec((d, ff), ("embed", "mlp")),
+        "wi_up": spec((d, ff), ("embed", "mlp")),
+        "wo": spec((ff, d), ("mlp", "embed")),
+    }
+
+
+def mlp(p, x, act=jax.nn.silu):
+    gate = act(jnp.einsum("...d,df->...f", x, p["wi_gate"].astype(x.dtype)))
+    up = jnp.einsum("...d,df->...f", x, p["wi_up"].astype(x.dtype))
+    return jnp.einsum("...f,fd->...d", gate * up, p["wo"].astype(x.dtype))
+
+
+# -------------------------------------------------------------- RoPE
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 1e4) -> jnp.ndarray:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                        # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., S, D/2)
+    ang = ang[..., None, :]                              # (..., S, 1, D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions3: jnp.ndarray,
+                theta: float = 1e4,
+                sections=(16, 24, 24)) -> jnp.ndarray:
+    """Qwen2-VL M-RoPE: rotary over 3 position streams (t, h, w).
+
+    x: (B, S, H, D); positions3: (3, B, S). ``sections`` are per-stream
+    frequency-pair counts summing to D/2 (scaled to D below).
+    """
+    d = x.shape[-1]
+    half = d // 2
+    freqs = rope_freqs(d, theta)                         # (half,)
+    # partition the half-dim frequency slots into the 3 sections
+    sec = jnp.asarray(sections, jnp.int32)
+    sec = (sec * half) // sec.sum()
+    bounds = jnp.cumsum(sec)
+    slot = jnp.arange(half)
+    which = (slot[None, :] >= jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), bounds[:-1]])[:, None]) & \
+        (slot[None, :] < bounds[:, None])               # (3, half)
+    # per-slot position: pick the stream owning this slot
+    pos = jnp.einsum("kbs,kf->bsf", positions3.astype(jnp.float32),
+                     which.astype(jnp.float32))          # (B, S, half)
+    ang = pos[..., None, :] * freqs                      # (B, S, 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------- embedding
+
+def embed_spec(vocab: int, d: int):
+    return {"table": spec((vocab, d), ("vocab", "embed"), init="embed")}
+
+
+def embed(p, tokens):
+    return p["table"][tokens]
+
+
+def unembed_spec(d: int, vocab: int, n_heads: int = 1):
+    if n_heads > 1:
+        return {"w": spec((n_heads, d, vocab), (None, "embed", "vocab"),
+                          fan_in_axes=(1,))}
+    return {"w": spec((d, vocab), ("embed", "vocab"))}
+
+
+def unembed(p, x):
+    w = p["w"]
+    if w.ndim == 3:
+        return jnp.einsum("...d,kdv->...kv", x, w.astype(x.dtype))
+    return jnp.einsum("...d,dv->...v", x, w.astype(x.dtype))

@@ -1,0 +1,168 @@
+"""Full language model: embed -> layer groups -> head; train/prefill/decode.
+
+Handles the modality stubs: ``cfg.embed_inputs=False`` architectures
+(musicgen, qwen2-vl) take precomputed frame/patch embeddings instead of
+token ids; musicgen emits ``n_codebooks`` parallel heads.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import spec
+from .layers import (embed_spec, embed, unembed_spec, unembed,
+                     rmsnorm_spec, rmsnorm)
+from .transformer import lm_block_specs, group_apply_layers
+
+
+def lm_spec(cfg):
+    s = {}
+    if cfg.embed_inputs:
+        s["embed"] = embed_spec(cfg.padded_vocab, cfg.d_model)
+    s["blocks"] = lm_block_specs(cfg)
+    s["ln_f"] = rmsnorm_spec(cfg.d_model)
+    s["head"] = unembed_spec(cfg.d_model, cfg.padded_vocab,
+                             max(cfg.n_codebooks, 1))
+    return s
+
+
+class LMOutput(NamedTuple):
+    logits: jnp.ndarray
+    caches: Any
+    aux_loss: jnp.ndarray
+
+
+def forward(params, cfg, tokens=None, embeds=None, mode="train",
+            caches=None, pos=None, positions3=None,
+            use_kernel=False, max_len=None) -> LMOutput:
+    from repro.distributed.sharding import annotate
+    act_dtype = jnp.dtype(cfg.act_dtype)
+    if cfg.embed_inputs:
+        x = embed(params["embed"], tokens).astype(act_dtype)
+    else:
+        x = embeds.astype(act_dtype)
+    x = annotate(x, "batch", "model", None)   # sequence-parallel residual
+
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = {}
+    for gi, (unit, reps) in enumerate(cfg.layout):
+        gkey = f"g{gi}"
+        gcache = caches[gkey] if caches is not None else None
+        x, nc, aux = group_apply_layers(
+            params["blocks"][gkey], x, cfg, unit, mode, caches=gcache,
+            pos=pos, positions3=positions3, use_kernel=use_kernel,
+            remat=cfg.remat, max_len=max_len)
+        new_caches[gkey] = nc
+        aux_total = aux_total + aux
+
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    if mode == "prefill":
+        x = x[:, -1:]          # only the last position feeds decoding
+    if mode == "train" and cfg.loss_chunk:
+        # chunked-CE path: hand hidden states to the loss (logits are
+        # materialized chunk-by-chunk there)
+        return LMOutput(logits=x, caches=None, aux_loss=aux_total)
+    logits = unembed(params["head"], x)
+    logits = annotate(logits, *(("batch",) + (None,) * (logits.ndim - 2)
+                                + ("model",)))
+    return LMOutput(logits=logits,
+                    caches=new_caches if mode != "train" else None,
+                    aux_loss=aux_total)
+
+
+def _ce_sums(logits, labels, vocab: int, zloss: float = 0.0):
+    """Masked-sum CE. logits: (..., V_padded); labels: (...) int32."""
+    V = logits.shape[-1]
+    lg = logits.astype(jnp.float32)
+    if V > vocab:
+        pad_mask = jnp.arange(V) < vocab
+        lg = jnp.where(pad_mask, lg, -1e30)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    ll = jnp.take_along_axis(
+        lg, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if zloss:
+        nll = nll + zloss * jnp.square(lse)
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(nll * mask), jnp.sum(mask)
+
+
+def cross_entropy(logits, labels, vocab: int, zloss: float = 0.0):
+    tot, n = _ce_sums(logits, labels, vocab, zloss)
+    return tot / jnp.maximum(n, 1.0)
+
+
+def chunked_cross_entropy(head_params, x, labels, cfg):
+    """Sequence-chunked CE: logits exist only one chunk at a time (the
+    (B, S, V) tensor is never materialized — essential for 256k vocabs at
+    1M-token steps)."""
+    from .layers import unembed as _unembed
+    from repro.distributed.sharding import annotate
+    B, S, d = x.shape
+    c = cfg.loss_chunk
+    assert S % c == 0, (S, c)
+    nc = S // c
+    xs = x.reshape(B, nc, c, d).swapaxes(0, 1)          # (nc, B, c, d)
+    if labels.ndim == 2:
+        ls = labels.reshape(B, nc, c).swapaxes(0, 1)
+    else:
+        K = labels.shape[-1]
+        ls = labels.reshape(B, nc, c, K).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def body(carry, xl):
+        xc, lc = xl
+        logits = _unembed(head_params, xc)
+        logits = annotate(logits, *(("batch",)
+                                    + (None,) * (logits.ndim - 2)
+                                    + ("model",)))
+        nll, cnt = _ce_sums(logits, lc, cfg.vocab, cfg.zloss)
+        tot, n = carry
+        return (tot + nll, n + cnt), None
+
+    (tot, n), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (xs, ls))
+    return tot / jnp.maximum(n, 1.0)
+
+
+def loss_fn(params, cfg, batch, use_kernel=False):
+    """batch: dict with 'tokens'/'embeds', 'labels', optional 'positions3'.
+
+    Returns (loss, dict of metrics).
+    """
+    out = forward(params, cfg,
+                  tokens=batch.get("tokens"),
+                  embeds=batch.get("embeds"),
+                  positions3=batch.get("positions3"),
+                  mode="train", use_kernel=use_kernel)
+    if cfg.loss_chunk:
+        ce = chunked_cross_entropy(params["head"], out.logits,
+                                   batch["labels"], cfg)
+    else:
+        ce = cross_entropy(out.logits, batch["labels"], cfg.vocab,
+                           cfg.zloss)
+    loss = ce + 0.01 * out.aux_loss
+    return loss, {"ce": ce, "aux": out.aux_loss}
+
+
+def prefill(params, cfg, tokens=None, embeds=None, positions3=None,
+            use_kernel=False, max_len=None):
+    """Build caches from a prompt; returns (last-token logits, caches).
+
+    ``max_len`` preallocates cache capacity for subsequent decode steps.
+    """
+    out = forward(params, cfg, tokens=tokens, embeds=embeds,
+                  positions3=positions3, mode="prefill",
+                  use_kernel=use_kernel, max_len=max_len)
+    return out.logits[:, -1:], out.caches
+
+
+def decode_step(params, cfg, tokens=None, embeds=None, caches=None,
+                pos=None, positions3=None):
+    """One decode step. tokens: (B, 1). Returns (logits, new caches)."""
+    out = forward(params, cfg, tokens=tokens, embeds=embeds, caches=caches,
+                  pos=pos, positions3=positions3, mode="decode")
+    return out.logits, out.caches

@@ -1,0 +1,144 @@
+"""Mixture-of-Experts with conflict-group dispatch (paper §3.3 adapted).
+
+Token->expert routing is the MoE instance of the hotspot problem: tokens
+"contend" for an expert's weights. The dispatch below is exactly the
+paper's group-locking schedule on tensors:
+
+  1. stable-sort the (token, k) assignments by expert id — conflict-group
+     formation; the sort order is the dependency list (``hot_update_order``);
+  2. each group executes as ONE dense batched matmul — the group's members
+     ("followers") need no further synchronization;
+  3. one gather in / one scatter out per group — the leader's single lock
+     acquire/release.
+
+Distribution: the token axis carries an explicit leading shard dimension
+(``cfg.moe_data_shards``, set to the mesh's data-parallel size by the
+launcher) so the capacity grid is **per data shard**; the grid's expert
+axis is annotated to the "model" mesh axis (EP). XLA then lowers dispatch/
+combine to all-to-alls over shard-local capacity instead of global grids.
+
+Capacity overflow (rank >= C within a group) drops to the residual stream
+— the analogue of the timeout abort; `suggest_capacity` implements the
+§4.6.1 dynamic-batch-size analogue (host-side capacity feedback from the
+expert-load EMA, since shapes must stay static inside one XLA program).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import spec
+from .layers import mlp_spec, mlp
+
+
+def moe_spec(cfg):
+    E, d, ff = cfg.n_experts, cfg.d_model, cfg.moe_d_ff
+    s = {
+        "router": spec((d, E), ("embed", "experts")),
+        "wi_gate": spec((E, d, ff), ("experts", "embed", "mlp"),
+                        fan_in_axes=(1,)),
+        "wi_up": spec((E, d, ff), ("experts", "embed", "mlp"),
+                      fan_in_axes=(1,)),
+        "wo": spec((E, ff, d), ("experts", "mlp", "embed"),
+                   fan_in_axes=(1,)),
+    }
+    if cfg.n_shared_experts:
+        s["shared"] = mlp_spec(d, ff * cfg.n_shared_experts)
+    return s
+
+
+class MoEStats(NamedTuple):
+    aux_loss: jnp.ndarray        # load-balance loss (scalar)
+    expert_counts: jnp.ndarray   # (E,) tokens routed per expert
+    dropped: jnp.ndarray         # overflow-dropped assignments (scalar)
+
+
+def capacity(tokens: int, top_k: int, n_experts: int, cf: float) -> int:
+    c = int(math.ceil(tokens * top_k * cf / n_experts))
+    return max(8, ((c + 7) // 8) * 8)     # pad for TPU-friendly tiling
+
+
+def suggest_capacity(count_ema: jnp.ndarray, top_k: int,
+                     slack: float = 1.2) -> int:
+    """§4.6.1 dynamic batch size, adapted: next-step capacity from the
+    observed per-expert load EMA (host-side; shapes are static per step)."""
+    return int(float(count_ema.max()) * slack) + 8
+
+
+def moe(p, x, cfg, cap: int | None = None):
+    """x: (B, S, d) -> (out (B, S, d), MoEStats)."""
+    from repro.distributed.sharding import annotate
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    ds = cfg.moe_data_shards
+    if ds <= 1 or (B * S) % ds:
+        ds = 1
+    T = (B * S) // ds                                  # tokens per shard
+    C = cap or capacity(T, k, E, cfg.capacity_factor)
+
+    xt = annotate(x.reshape(ds, T, d), "batch", None, None)
+    logits = jnp.einsum("xtd,de->xte", xt, p["router"].astype(x.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gates, eidx = jax.lax.top_k(probs, k)              # (ds, T, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # ---- conflict-group formation (stable sort = dependency order) ----
+    eflat = eidx.reshape(ds, T * k).astype(jnp.int32)
+    gflat = gates.reshape(ds, T * k)
+    order = jnp.argsort(eflat, axis=-1, stable=True)
+    sorted_e = jnp.take_along_axis(eflat, order, axis=-1)
+    is_leader = jnp.concatenate(
+        [jnp.ones((ds, 1), bool), sorted_e[:, 1:] != sorted_e[:, :-1]],
+        axis=-1)
+    idx = jnp.arange(T * k, dtype=jnp.int32)[None]
+    run_start = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(is_leader, idx, 0), axis=-1)
+    rank = idx - run_start                             # position in group
+    keep = rank < C
+    dest = jnp.where(keep, sorted_e * C + rank, E * C)  # overflow -> drop
+
+    # ---- gather into the per-shard (E, C) capacity grid ----
+    sid = jnp.arange(ds, dtype=jnp.int32)[:, None]
+    token_of = (order // k).astype(jnp.int32)
+    slot_token = jnp.full((ds, E * C), T, jnp.int32).at[
+        sid, dest].set(token_of, mode="drop")
+    slot_gate = jnp.zeros((ds, E * C), jnp.float32).at[
+        sid, dest].set(jnp.take_along_axis(gflat, order, -1), mode="drop")
+    xt_pad = jnp.concatenate([xt, jnp.zeros((ds, 1, d), xt.dtype)], axis=1)
+    h = jnp.take_along_axis(xt_pad, slot_token[..., None], axis=1)
+    h = annotate(h, "batch", "model", None)       # (ds, E*C, d) pre-grid
+    h = annotate(h.reshape(ds, E, C, d), "batch", "model", None, None)
+
+    # ---- one dense matmul per group (EP over the expert axis) ----
+    act = jax.nn.silu(jnp.einsum("xecd,edf->xecf", h,
+                                 p["wi_gate"].astype(x.dtype)))
+    up = jnp.einsum("xecd,edf->xecf", h, p["wi_up"].astype(x.dtype))
+    oe = jnp.einsum("xecf,efd->xecd", act * up, p["wo"].astype(x.dtype))
+    oe = annotate(oe, "batch", "model", None, None)
+
+    # ---- combine (one weighted scatter per group member) ----
+    contrib = (oe.reshape(ds, E * C, d).astype(jnp.float32)
+               * slot_gate[..., None])
+    contrib = annotate(contrib, "batch", "model", None)
+    y0 = annotate(jnp.zeros((ds, T + 1, d), jnp.float32),
+                  "batch", None, None)
+    # vmapped scatter: the shard dim becomes a scatter *batch* dim, which
+    # SPMD partitions (explicit leading indices would force replication)
+    y = jax.vmap(lambda yy, idx, cc_: yy.at[idx].add(cc_))(
+        y0, slot_token, contrib)[:, :T]
+    y = annotate(y, "batch", None, None).astype(x.dtype)
+
+    if cfg.n_shared_experts:
+        y = y + mlp(p["shared"], xt)
+
+    # load-balance aux loss (Switch/GShard form), fleet-wide
+    cnt = jnp.zeros((ds, E), jnp.float32).at[sid, eflat].add(1.0).sum(0)
+    frac_tokens = cnt / jnp.maximum(cnt.sum(), 1.0)
+    frac_prob = probs.mean(axis=(0, 1))
+    aux = E * jnp.sum(frac_tokens * frac_prob)
+    stats = MoEStats(aux_loss=aux, expert_counts=cnt.astype(jnp.int32),
+                     dropped=jnp.sum(~keep).astype(jnp.int32))
+    return y.reshape(B, S, d), stats

@@ -1,0 +1,110 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Block structure (the paper's "recurrent block"):
+  x -> [linear -> gelu] (gate branch)
+  x -> [linear -> conv1d(w=4) -> RG-LRU] (recurrent branch)
+  out = (gate * rec) -> linear
+
+RG-LRU recurrence (per channel):
+  r_t = sigmoid(W_a x_t + b_a)            recurrence gate
+  i_t = sigmoid(W_x x_t + b_x)            input gate
+  a_t = exp(-c * softplus(L) * r_t)       log-space decay, c = 8
+  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Train/prefill runs the recurrence as an associative scan over time; decode
+carries (h, conv window) state.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import spec
+
+C_RGLRU = 8.0
+
+
+def rglru_spec(cfg):
+    d, w = cfg.d_model, cfg.lru_width
+    cw = cfg.conv_width
+    return {
+        "w_gate": spec((d, w), ("embed", "lru")),
+        "w_in": spec((d, w), ("embed", "lru")),
+        "conv": spec((cw, w), (None, "lru"), init="dense"),
+        "w_a": spec((w, w), ("lru", "lru")),
+        "b_a": spec((w,), ("lru",), init="zeros"),
+        "w_x": spec((w, w), ("lru", "lru")),
+        "b_x": spec((w,), ("lru",), init="zeros"),
+        "log_lambda": spec((w,), ("lru",), init="value", value=0.5),
+        "w_out": spec((w, d), ("lru", "embed")),
+    }
+
+
+class RGLRUState(NamedTuple):
+    h: jnp.ndarray         # (B, W) recurrent state
+    conv: jnp.ndarray      # (B, conv_width-1, W) conv tail
+
+
+def _gates(p, u):
+    r = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", u,
+                                  p["w_a"].astype(u.dtype))
+                       + p["b_a"].astype(u.dtype))
+    i = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", u,
+                                  p["w_x"].astype(u.dtype))
+                       + p["b_x"].astype(u.dtype))
+    lam = jax.nn.softplus(p["log_lambda"].astype(jnp.float32))
+    log_a = -C_RGLRU * lam * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i.astype(jnp.float32) * u.astype(jnp.float32))
+    return a, gated
+
+
+def _conv1d(p, u, state=None):
+    """Causal depthwise conv along time. u: (B, S, W)."""
+    cw = p["conv"].shape[0]
+    if state is None:
+        pad = jnp.zeros((u.shape[0], cw - 1, u.shape[2]), u.dtype)
+    else:
+        pad = state.astype(u.dtype)
+    full = jnp.concatenate([pad, u], axis=1)
+    out = sum(full[:, i:i + u.shape[1]] * p["conv"][i].astype(u.dtype)
+              for i in range(cw))
+    return out, full[:, -(cw - 1):] if cw > 1 else pad
+
+
+def rglru(p, x, cfg, mode: str, state: RGLRUState | None = None):
+    """x: (B, S, d) -> (out, new_state|None)."""
+    B, S, d = x.shape
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x,
+                                  p["w_gate"].astype(x.dtype)))
+    u = jnp.einsum("bsd,dw->bsw", x, p["w_in"].astype(x.dtype))
+
+    if mode in ("train", "prefill"):
+        u, conv_tail = _conv1d(p, u)
+        a, gated = _gates(p, u)
+        # h_t = a_t h_{t-1} + gated_t  — associative scan over time
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, b1 * a2 + b2
+        aa, hh = jax.lax.associative_scan(combine, (a, gated), axis=1)
+        h = hh
+        out = jnp.einsum("bsw,wd->bsd", (h * gate.astype(jnp.float32))
+                         .astype(x.dtype), p["w_out"].astype(x.dtype))
+        new_state = None
+        if mode == "prefill":
+            new_state = RGLRUState(h=h[:, -1].astype(jnp.float32),
+                                   conv=conv_tail.astype(jnp.float32))
+        return out, new_state
+
+    # decode: single step
+    assert state is not None
+    u, conv_tail = _conv1d(p, u, state.conv)
+    a, gated = _gates(p, u)
+    h = a[:, 0] * state.h + gated[:, 0]
+    out = jnp.einsum("bw,wd->bd", (h * gate[:, 0].astype(jnp.float32))
+                     .astype(x.dtype), p["w_out"].astype(x.dtype))
+    return out[:, None], RGLRUState(h=h, conv=conv_tail.astype(jnp.float32))

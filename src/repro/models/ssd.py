@@ -1,0 +1,182 @@
+"""Mamba-2 SSD block (state-space duality, arXiv:2405.21060).
+
+Chunked SSD algorithm (the paper's Listing 1, adapted to JAX):
+the sequence is split into chunks of length Q; within a chunk the output is
+an attention-like quadratic form masked by the decay kernel; across chunks
+a linear recurrence carries the (H, P, N) state. All matmuls are dense and
+MXU-shaped. Decode is the pure recurrence.
+
+Shapes: d_inner = expand * d_model; H = d_inner / head_dim (P = head_dim);
+N = ssm_state. B and C projections are shared across heads (n_groups = 1).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import spec
+
+
+def ssd_spec(cfg):
+    d = cfg.d_model
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    cw = cfg.conv_width
+    return {
+        "w_in": spec((d, 2 * di + 2 * N + H), ("embed", "lru")),
+        "conv": spec((cw, di + 2 * N), (None, "lru")),
+        "a_log": spec((H,), (None,), init="value", value=0.0),
+        "dt_bias": spec((H,), (None,), init="zeros"),
+        "d_skip": spec((H,), (None,), init="ones"),
+        "norm": spec((di,), ("lru",), init="ones"),
+        "w_out": spec((di, d), ("lru", "embed")),
+    }
+
+
+class SSDState(NamedTuple):
+    h: jnp.ndarray        # (B, H, P, N) ssm state
+    conv: jnp.ndarray     # (B, conv_width-1, d_inner + 2N)
+
+
+def _split_proj(p, x, cfg):
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z_x_b_c_dt = jnp.einsum("bsd,dk->bsk", x, p["w_in"].astype(x.dtype))
+    z = z_x_b_c_dt[..., :di]
+    xbc = z_x_b_c_dt[..., di:2 * di + 2 * N]
+    dt = z_x_b_c_dt[..., 2 * di + 2 * N:]
+    return z, xbc, dt
+
+
+def _conv1d(p, u, state=None):
+    cw = p["conv"].shape[0]
+    if state is None:
+        pad = jnp.zeros((u.shape[0], cw - 1, u.shape[2]), u.dtype)
+    else:
+        pad = state.astype(u.dtype)
+    full = jnp.concatenate([pad, u], axis=1)
+    out = sum(full[:, i:i + u.shape[1]] * p["conv"][i].astype(u.dtype)
+              for i in range(cw))
+    tail = full[:, -(cw - 1):] if cw > 1 else pad
+    return jax.nn.silu(out), tail
+
+
+def _segsum(a):
+    """a: (..., Q) -> (..., Q, Q) lower-triangular cumulative sums:
+    out[i, j] = sum(a[j+1 .. i]) for j < i."""
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd(p, x, cfg, mode: str, state: SSDState | None = None):
+    """x: (B, S, d) -> (out, new_state|None)."""
+    B, S, d = x.shape
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xbc, dt = _split_proj(p, x, cfg)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))         # (H,) negative
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (B,S,H)
+
+    if mode in ("train", "prefill"):
+        from repro.distributed.sharding import annotate
+        xbc, conv_tail = _conv1d(p, xbc)
+        xs = annotate(xbc[..., :di].reshape(B, S, H, P),
+                      "batch", None, "model", None)
+        Bm = xbc[..., di:di + N]                          # (B,S,N)
+        Cm = xbc[..., di + N:]                            # (B,S,N)
+
+        Q = min(cfg.ssm_chunk, S)
+        nc = S // Q
+        assert S % Q == 0, f"seq {S} not divisible by chunk {Q}"
+        xc = xs.reshape(B, nc, Q, H, P)
+        bc = Bm.reshape(B, nc, Q, N)
+        cc = Cm.reshape(B, nc, Q, N)
+        dtc = dt.reshape(B, nc, Q, H)
+        da = dtc * A                                      # (B,nc,Q,H)
+
+        # 1. intra-chunk (attention-like with decay kernel). The
+        # contraction order is forced explicitly — a single 4-operand
+        # einsum lets XLA materialize 6-D outer products (16 GiB/device
+        # at full config).
+        from repro.distributed.sharding import annotate
+        L = jnp.exp(_segsum(da.transpose(0, 1, 3, 2)))    # (B,nc,H,Q,Q)
+        L = annotate(L, "batch", None, "model", None, None)
+        scores = jnp.einsum("bcqn,bckn->bcqk", cc, bc)    # (B,nc,Q,Q)
+        w = scores[:, :, None].astype(jnp.float32) * L    # (B,nc,H,Q,Q)
+        xdt = (xc.astype(jnp.float32)
+               * dtc.astype(jnp.float32)[..., None])      # (B,nc,Q,H,P)
+        y_diag = jnp.einsum("bchqk,bckhp->bcqhp", w, xdt)
+        y_diag = annotate(y_diag, "batch", None, None, "model", None)
+
+        # 2. per-chunk end states
+        dec_end = jnp.exp(da.sum(axis=2, keepdims=True)
+                          - jnp.cumsum(da, axis=2))       # decay to chunk end
+        states = jnp.einsum("bcqn,bcqh,bcqhp->bchpn",
+                            bc.astype(jnp.float32),
+                            (dtc * dec_end).astype(jnp.float32),
+                            xc.astype(jnp.float32))       # (B,nc,H,P,N)
+        states = annotate(states, "batch", None, "model", None, None)
+
+        # 3. inter-chunk recurrence over chunk states
+        chunk_decay = jnp.exp(da.sum(axis=2))             # (B,nc,H)
+
+        def scan_fn(h, inp):
+            st, dec = inp
+            h = h * dec[..., None, None] + st
+            return h, h
+        h0 = jnp.zeros((B, H, P, N), jnp.float32)
+        _, hs = jax.lax.scan(
+            scan_fn, h0,
+            (states.transpose(1, 0, 2, 3, 4),
+             chunk_decay.transpose(1, 0, 2)))
+        hs = hs.transpose(1, 0, 2, 3, 4)                  # (B,nc,H,P,N)
+        h_prev = jnp.concatenate([h0[:, None], hs[:, :-1]], axis=1)
+
+        # 4. inter-chunk contribution: h_prev reaches step t decayed by the
+        # *inclusive* prefix exp(sum_{j<=t} da_j)
+        dec_in = jnp.exp(jnp.cumsum(da, axis=2))
+        y_off = jnp.einsum("bcqn,bcqh,bchpn->bcqhp",
+                           cc.astype(jnp.float32),
+                           dec_in.astype(jnp.float32), h_prev)
+
+        y = annotate((y_diag + y_off).reshape(B, S, H, P),
+                     "batch", None, "model", None)
+        y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] \
+            * xs.astype(jnp.float32)
+        y = y.reshape(B, S, di)
+        # gated RMSNorm (mamba2's norm-before-out)
+        y = y * jax.nn.silu(z.astype(jnp.float32))
+        var = jnp.mean(jnp.square(y), -1, keepdims=True)
+        y = y * jax.lax.rsqrt(var + 1e-6) * p["norm"].astype(jnp.float32)
+        out = jnp.einsum("bsk,kd->bsd", y.astype(x.dtype),
+                         p["w_out"].astype(x.dtype))
+        new_state = None
+        if mode == "prefill":
+            new_state = SSDState(h=hs[:, -1], conv=conv_tail.astype(
+                jnp.float32))
+        return out, new_state
+
+    # ------------------------------------------------------------ decode
+    assert state is not None
+    xbc, conv_tail = _conv1d(p, xbc, state.conv)
+    xs = xbc[..., :di].reshape(B, H, P)                   # S == 1 squeezed
+    Bm = xbc[:, 0, di:di + N]                             # (B,N)
+    Cm = xbc[:, 0, di + N:]
+    dt1 = dt[:, 0]                                        # (B,H)
+    decay = jnp.exp(dt1 * A)                              # (B,H)
+    dbx = jnp.einsum("bn,bh,bhp->bhpn", Bm.astype(jnp.float32),
+                     dt1, xs.astype(jnp.float32))
+    h = state.h * decay[..., None, None] + dbx
+    y = jnp.einsum("bn,bhpn->bhp", Cm.astype(jnp.float32), h)
+    y = y + p["d_skip"].astype(jnp.float32)[None, :, None] \
+        * xs.astype(jnp.float32)
+    y = y.reshape(B, di)
+    y = y * jax.nn.silu(z[:, 0].astype(jnp.float32))
+    var = jnp.mean(jnp.square(y), -1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-6) * p["norm"].astype(jnp.float32)
+    out = jnp.einsum("bk,kd->bd", y.astype(x.dtype),
+                     p["w_out"].astype(x.dtype))
+    return out[:, None], SSDState(h=h, conv=conv_tail.astype(jnp.float32))

@@ -1,0 +1,226 @@
+"""Block assembly + layer-group scan machinery.
+
+Each ``LayerGroup = (unit, repeats)`` compiles to one ``lax.scan`` over
+``repeats`` with the unit's parameters stacked on a leading "layers" axis.
+Caches/states are scanned alongside as xs/ys. Remat wraps the unit body.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import spec, stack_specs
+from .layers import rmsnorm_spec, rmsnorm, mlp_spec, mlp
+from .attention import (gqa_spec, gqa_attend, gqa_cache_len, KVCache,
+                        mla_spec, mla_attend, MLACache)
+from .rglru import rglru_spec, rglru, RGLRUState
+from .ssd import ssd_spec, ssd, SSDState
+
+
+# --------------------------------------------------------------- specs
+
+def block_spec(cfg, kind):
+    mixer, mlp_kind = kind
+    d = cfg.d_model
+    s = {"ln1": rmsnorm_spec(d)}
+    if mixer in ("global", "local"):
+        s["attn"] = gqa_spec(cfg)
+    elif mixer == "mla":
+        s["attn"] = mla_spec(cfg)
+    elif mixer == "rglru":
+        s["attn"] = rglru_spec(cfg)
+    elif mixer == "ssd":
+        s["attn"] = ssd_spec(cfg)
+    else:  # pragma: no cover
+        raise ValueError(mixer)
+    if mlp_kind != "none":
+        s["ln2"] = rmsnorm_spec(d)
+        if mlp_kind in ("dense", "moe+dense"):
+            s["mlp"] = mlp_spec(d, cfg.d_ff)
+        if mlp_kind in ("moe", "moe+dense"):
+            from .moe import moe_spec
+            s["moe"] = moe_spec(cfg)
+    return s
+
+
+def group_spec(cfg, unit, repeats):
+    return {f"u{i}": stack_specs(block_spec(cfg, kind), repeats, "layers")
+            for i, kind in enumerate(unit)}
+
+
+def lm_block_specs(cfg):
+    return {f"g{gi}": group_spec(cfg, unit, reps)
+            for gi, (unit, reps) in enumerate(cfg.layout)}
+
+
+# --------------------------------------------------------------- caches
+
+def block_cache_shape(cfg, kind, batch: int, seq_len: int, dtype):
+    """ShapeDtypeStructs for one layer's decode cache."""
+    mixer = kind[0]
+    hd = cfg.hd
+    if mixer in ("global", "local"):
+        cl = gqa_cache_len(cfg, mixer, seq_len)
+        sh = (batch, cl, cfg.n_kv_heads, hd)
+        return KVCache(k=jax.ShapeDtypeStruct(sh, dtype),
+                       v=jax.ShapeDtypeStruct(sh, dtype))
+    if mixer == "mla":
+        return MLACache(
+            ckv=jax.ShapeDtypeStruct((batch, seq_len, cfg.kv_lora_rank),
+                                     dtype),
+            krope=jax.ShapeDtypeStruct((batch, seq_len, cfg.qk_rope_dim),
+                                       dtype))
+    if mixer == "rglru":
+        w = cfg.lru_width
+        return RGLRUState(
+            h=jax.ShapeDtypeStruct((batch, w), jnp.float32),
+            conv=jax.ShapeDtypeStruct((batch, cfg.conv_width - 1, w),
+                                      jnp.float32))
+    if mixer == "ssd":
+        return SSDState(
+            h=jax.ShapeDtypeStruct(
+                (batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                jnp.float32),
+            conv=jax.ShapeDtypeStruct(
+                (batch, cfg.conv_width - 1, cfg.d_inner + 2 * cfg.ssm_state),
+                jnp.float32))
+    raise ValueError(mixer)  # pragma: no cover
+
+
+def _stack_struct(tree, n: int):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), tree)
+
+
+def lm_cache_shapes(cfg, batch: int, seq_len: int, dtype=jnp.bfloat16):
+    """Abstract cache tree for the whole model (dry-run input)."""
+    return {
+        f"g{gi}": {
+            f"u{i}": _stack_struct(
+                block_cache_shape(cfg, kind, batch, seq_len, dtype), reps)
+            for i, kind in enumerate(unit)}
+        for gi, (unit, reps) in enumerate(cfg.layout)}
+
+
+def lm_init_cache(cfg, batch: int, seq_len: int, dtype=jnp.bfloat16):
+    shapes = lm_cache_shapes(cfg, batch, seq_len, dtype)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+
+
+# --------------------------------------------------------------- apply
+
+def block_apply(p, x, cfg, kind, mode, cache=None, pos=None,
+                positions3=None, use_kernel=False, max_len=None):
+    """One block. Returns (x, new_cache, aux_loss)."""
+    mixer, mlp_kind = kind
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if mixer in ("global", "local"):
+        out, ncache = gqa_attend(p["attn"], h, cfg, mixer, mode,
+                                 cache=cache, pos=pos, positions3=positions3,
+                                 use_kernel=use_kernel, max_len=max_len)
+    elif mixer == "mla":
+        out, ncache = mla_attend(p["attn"], h, cfg, mode, cache=cache,
+                                 pos=pos, max_len=max_len)
+    elif mixer == "rglru":
+        out, ncache = rglru(p["attn"], h, cfg, mode, state=cache)
+    else:  # ssd
+        out, ncache = ssd(p["attn"], h, cfg, mode, state=cache)
+    x = x + out
+    aux = jnp.zeros((), jnp.float32)
+    if mlp_kind != "none":
+        h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        y = jnp.zeros_like(x)
+        if "mlp" in p:
+            y = y + mlp(p["mlp"], h)
+        if "moe" in p:
+            from .moe import moe
+            ym, stats = moe(p["moe"], h, cfg)
+            aux = aux + stats.aux_loss
+            y = y + ym
+        x = x + y
+    return x, ncache, aux
+
+
+def group_apply_layers(p, x, cfg, unit, mode, caches=None, pos=None,
+                       positions3=None, use_kernel=False, remat=True,
+                       max_len=None):
+    """Scan one layer group. caches: pytree with leading `repeats` axis.
+
+    Returns (x, new_caches|None, aux_sum).
+    """
+    has_cache = mode in ("prefill", "decode")
+
+    def unit_body(x, layer_params, layer_caches):
+        from repro.distributed.sharding import annotate
+        # sequence parallelism at the block boundary: the residual stream
+        # (and thus the remat-scan's saved carries) is sharded over the
+        # model axis along the sequence; attention/MLP gather what they
+        # need (Megatron-SP collectives, inserted by SPMD). 16x smaller
+        # per-device activation checkpoints for 62-layer models.
+        x = annotate(x, "batch", "model", None)
+        aux_sum = jnp.zeros((), jnp.float32)
+        new_caches = {}
+        for i, kind in enumerate(unit):
+            c = layer_caches[f"u{i}"] if layer_caches is not None else None
+            x, nc, aux = block_apply(layer_params[f"u{i}"], x, cfg, kind,
+                                     mode, cache=c, pos=pos,
+                                     positions3=positions3,
+                                     use_kernel=use_kernel, max_len=max_len)
+            new_caches[f"u{i}"] = nc
+            aux_sum = aux_sum + aux
+        return x, (new_caches if has_cache else None), aux_sum
+
+    if remat and mode == "train":
+        unit_body = jax.checkpoint(
+            unit_body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    if cfg.unroll_layers:
+        # python-unrolled path (exact per-layer cost probes; also usable
+        # for small models where scan overhead dominates)
+        n_reps = jax.tree.leaves(p)[0].shape[0]
+        aux_total = jnp.zeros((), jnp.float32)
+        caches_out = []
+        for r in range(n_reps):
+            lp = jax.tree.map(lambda a: a[r], p)
+            lc = (jax.tree.map(lambda a: a[r], caches)
+                  if caches is not None else None)
+            x, nc, a = unit_body(x, lp, lc)
+            caches_out.append(nc)
+            aux_total = aux_total + a
+        if has_cache and caches_out[0] is not None:
+            caches_out = jax.tree.map(
+                lambda *xs: jnp.stack(xs, 0), *caches_out)
+        else:
+            caches_out = None
+        return x, caches_out, aux_total
+
+    if mode == "train":
+        def scan_fn(carry, layer_params):
+            x, aux = carry
+            x, _, a = unit_body(x, layer_params, None)
+            return (x, aux + a), None
+        (x, aux), _ = jax.lax.scan(scan_fn, (x, jnp.zeros((), jnp.float32)),
+                                   p)
+        return x, None, aux
+
+    if mode == "prefill":
+        def scan_fn(carry, layer_params):
+            x, aux = carry
+            x, ncaches, a = unit_body(x, layer_params, None)
+            return (x, aux + a), ncaches
+        (x, aux), caches_out = jax.lax.scan(
+            scan_fn, (x, jnp.zeros((), jnp.float32)), p)
+        return x, caches_out, aux
+
+    # decode: caches are xs AND ys
+    def scan_fn(carry, xs):
+        x, aux = carry
+        layer_params, layer_caches = xs
+        x, ncaches, a = unit_body(x, layer_params, layer_caches)
+        return (x, aux + a), ncaches
+    (x, aux), caches_out = jax.lax.scan(
+        scan_fn, (x, jnp.zeros((), jnp.float32)), (p, caches))
+    return x, caches_out, aux

@@ -1,0 +1,7 @@
+from .adamw import AdamWConfig, AdamWState, init, apply, schedule, global_norm
+from .hotspot_update import grouped_embed, serial_embed
+from .compression import quantized_psum, quantize, dequantize
+
+__all__ = ["AdamWConfig", "AdamWState", "init", "apply", "schedule",
+           "global_norm", "grouped_embed", "serial_embed",
+           "quantized_psum", "quantize", "dequantize"]

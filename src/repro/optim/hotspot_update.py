@@ -1,0 +1,43 @@
+"""Hotspot-grouped embedding gradient (the paper's technique on the
+training hot path).
+
+Embedding backward is a scatter-add of per-token cotangents into vocab
+rows with Zipf-distributed indices — the literal hotspot-update workload.
+``grouped_embed`` swaps XLA's serialized duplicate-index scatter for the
+conflict-group schedule (stable sort -> in-group segment reduction -> one
+write per distinct row) via a custom VJP; numerically identical (f32
+accumulation), different schedule.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.group_apply import group_apply
+
+
+@jax.custom_vjp
+def grouped_embed(table: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    return table[tokens]
+
+
+def _fwd(table, tokens):
+    return table[tokens], (tokens, table.shape, table.dtype)
+
+
+def _bwd(res, ct):
+    tokens, tshape, tdtype = res
+    ids = tokens.reshape(-1)
+    upd = ct.reshape(-1, tshape[-1])
+    zero = jnp.zeros(tshape, jnp.float32)
+    # conflict-group apply: sort + segment-reduce + one write per group
+    dtable = group_apply(zero, ids, upd.astype(jnp.float32))
+    return dtable.astype(tdtype), None
+
+
+grouped_embed.defvjp(_fwd, _bwd)
+
+
+def serial_embed(table: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    """Baseline path: XLA's native gather/scatter-add VJP (2PL analogue)."""
+    return table[tokens]

@@ -1,0 +1,97 @@
+"""Property tests for the adapted technique: conflict-group apply and
+dependency-list semantics."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (group_apply, hotspot_apply, scatter_serial,
+                        form_groups, detect_hot, init_hotspot,
+                        update_hotspot, DependencyList, DependencyError)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(1, 300),
+    v=st.integers(1, 64),
+    d=st.sampled_from([1, 4, 9]),
+    hot_frac=st.floats(0.0, 0.9),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_group_apply_equals_serial(n, v, d, hot_frac, seed):
+    rng = np.random.default_rng(seed)
+    ids = rng.integers(0, v, n).astype(np.int32)
+    n_hot = int(n * hot_frac)
+    if n_hot:
+        ids[:n_hot] = rng.integers(0, v)      # force a heavy hotspot
+    ids = jnp.asarray(ids)
+    upd = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    table = jnp.asarray(rng.normal(size=(v, d)).astype(np.float32))
+    want = scatter_serial(table, ids, upd)
+    got_g = group_apply(table, ids, upd)
+    got_h = hotspot_apply(table, ids, upd, threshold=8)
+    np.testing.assert_allclose(got_g, want, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(got_h, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 200), v=st.integers(1, 32),
+       seed=st.integers(0, 2**31 - 1))
+def test_form_groups_structure(n, v, seed):
+    rng = np.random.default_rng(seed)
+    ids = jnp.asarray(rng.integers(0, v, n).astype(np.int32))
+    g = form_groups(ids)
+    # group sizes at leaders sum to n; leader count = distinct ids
+    assert int(g.group_size.sum()) == n
+    assert int(g.is_leader.sum()) == len(np.unique(np.asarray(ids)))
+    # sorted ids non-decreasing (dependency order is total per group)
+    s = np.asarray(g.sorted_ids)
+    assert (np.diff(s) >= 0).all()
+
+
+def test_hotspot_detector_promote_demote():
+    ids = jnp.concatenate([jnp.zeros(40, jnp.int32),
+                           jnp.arange(1, 11, dtype=jnp.int32)])
+    hot = detect_hot(ids, 16, threshold=32)
+    assert bool(hot[0]) and not bool(hot[1:].any())
+    st_ = init_hotspot(16)
+    st_ = update_hotspot(st_, ids, threshold=32)
+    assert bool(st_.hot[0])
+    cold = jnp.arange(1, 11, dtype=jnp.int32)
+    for _ in range(40):                       # sweeper demotes as EMA decays
+        st_ = update_hotspot(st_, cold, threshold=32)
+    assert not bool(st_.hot[0])
+
+
+class TestDependencyList:
+    def test_commit_order_enforced(self):
+        dl = DependencyList()
+        a, b, c = dl.assign(), dl.assign(), dl.assign()
+        assert dl.can_commit(a) and not dl.can_commit(b)
+        with pytest.raises(DependencyError):
+            dl.commit(b)
+        dl.commit(a)
+        dl.commit(b)
+        dl.commit(c)
+
+    def test_rollback_reverse_order(self):
+        dl = DependencyList()
+        a, b, c = dl.assign(), dl.assign(), dl.assign()
+        with pytest.raises(DependencyError):
+            dl.rollback(a)                    # not the tail
+        dl.rollback(c)
+        dl.rollback(b)
+        dl.rollback(a)
+
+    def test_cascade_from(self):
+        dl = DependencyList()
+        orders = [dl.assign() for _ in range(5)]
+        rolled = dl.rollback_all_from(orders[2])
+        assert rolled == [orders[4], orders[3], orders[2]]
+        assert dl.open_orders == tuple(orders[:2])
+
+    def test_recover_reverse_sequence(self):
+        dl = DependencyList()
+        seq = dl.recover([3, 7, 5])
+        assert seq == [7, 5, 3]
+        assert dl.assign() == 8               # monotone after recovery

@@ -1,0 +1,114 @@
+"""CC-engine behavior tests: protocol separation, oracle agreement,
+figure-shape assertions (the paper's qualitative claims as tests)."""
+import jax.numpy as jnp
+import pytest
+
+from repro.core.lock import (simulate, extract, WorkloadSpec, CostModel,
+                             simulate_aria, extract_aria)
+from repro.core.lock.ref_engine import predicted_tps
+
+HOT = WorkloadSpec(kind="hotspot_update", txn_len=1, n_rows=512)
+
+
+def tps(proto, T, horizon=250_000, costs=None, **kw):
+    s = simulate(proto, HOT, n_threads=T, horizon=horizon,
+                 costs=costs or CostModel(), **kw)
+    return extract(proto, T, s).tps
+
+
+class TestParserShapes:
+    """Fig 2a: MySQL at high concurrency is slower than serial."""
+
+    def test_mysql_collapses_below_serial(self):
+        assert tps("mysql", 256) < tps("mysql", 1) * 0.5
+
+    def test_o1_beats_mysql_under_contention(self):
+        assert tps("o1", 256) > tps("mysql", 256) * 1.5
+
+    def test_o2_flat_in_threads(self):
+        a, b = tps("o2", 64), tps("o2", 512)
+        assert abs(a - b) / a < 0.1
+
+    def test_group_beats_everything_hot(self):
+        g = tps("group", 256)
+        assert g > tps("o2", 256) * 2
+        assert g > tps("mysql", 256) * 5
+        assert g > tps("bamboo", 256) * 2
+
+    def test_group_equals_o2_below_threshold(self):
+        # hotspot never promotes with few threads (queue < 32)
+        assert abs(tps("group", 8) - tps("o2", 8)) < 1e-6
+
+    def test_bamboo_good_low_bad_high(self):
+        """Fig 8: Bamboo helps at low concurrency, saturates at high."""
+        assert tps("bamboo", 64) > tps("mysql", 64) * 1.5
+        assert tps("bamboo", 1024) < tps("group", 1024) * 0.5
+
+
+class TestOracle:
+    @pytest.mark.parametrize("proto", ["mysql", "o1", "o2", "group",
+                                       "bamboo"])
+    @pytest.mark.parametrize("T", [1, 128])
+    def test_engine_matches_analytic(self, proto, T):
+        got = tps(proto, T, horizon=400_000)
+        want = predicted_tps(proto, T, CostModel())
+        assert got == pytest.approx(want, rel=0.15), (proto, T)
+
+
+class TestReplication:
+    """Fig 9: group commit amortizes the sync latency."""
+
+    def test_sync_ratio(self):
+        cm = CostModel(op_exec=500, sync_lat=10_000)
+        g = tps("group", 256, horizon=3_000_000, costs=cm)
+        m = tps("mysql", 256, horizon=3_000_000, costs=cm)
+        assert 10 < g / m < 40        # paper: 22.3x
+
+    def test_group_commit_off_serializes(self):
+        cm = CostModel(op_exec=500, sync_lat=10_000)
+        off = tps("group", 128, horizon=3_000_000, costs=cm,
+                  group_commit=False)
+        on = tps("group", 128, horizon=3_000_000, costs=cm)
+        assert on > off * 3
+
+
+class TestAborts:
+    def test_injected_aborts_cascade_under_group(self):
+        s = simulate("group", HOT, n_threads=64, horizon=300_000,
+                     p_abort=0.02)
+        r = extract("group", 64, s)
+        # cascades amplify: forced aborts >> injected ones
+        assert r.forced_aborts > r.user_aborts * 3
+
+    def test_no_cascades_under_2pl(self):
+        s = simulate("mysql", HOT, n_threads=64, horizon=300_000,
+                     p_abort=0.02)
+        r = extract("mysql", 64, s)
+        assert r.forced_aborts == 0
+
+
+class TestAria:
+    def test_flat_scaling(self):
+        r64 = extract_aria(64, simulate_aria(HOT, 64, horizon=400_000))
+        r512 = extract_aria(512, simulate_aria(HOT, 512, horizon=400_000))
+        assert r64.tps == pytest.approx(r512.tps, rel=0.05)
+
+    def test_single_winner_per_batch(self):
+        r = extract_aria(64, simulate_aria(HOT, 64, horizon=400_000))
+        assert r.abort_rate > 0.9     # one hotspot -> one winner
+
+    def test_skew_rollbacks(self):
+        w = WorkloadSpec(kind="zipf", zipf_s=0.99, txn_len=4, n_rows=8192)
+        r = extract_aria(256, simulate_aria(w, 256, horizon=400_000))
+        assert r.abort_rate > 0.2     # paper: >20% at skew 0.99
+
+
+class TestLockOps:
+    def test_group_locking_reduces_lock_ops(self):
+        """Fig 6d: group locking creates far fewer locks."""
+        sm = simulate("mysql", HOT, n_threads=256, horizon=250_000)
+        sg = simulate("group", HOT, n_threads=256, horizon=250_000)
+        rm = extract("mysql", 256, sm)
+        rg = extract("group", 256, sg)
+        assert rg.lock_ops / max(rg.commits, 1) < \
+            0.5 * rm.lock_ops / max(rm.commits, 1)
