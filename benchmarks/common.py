@@ -1,5 +1,13 @@
 """Shared benchmark plumbing. Every figure module exposes
-``run(quick=True) -> list[str]`` of CSV rows ``name,us_per_call,derived``."""
+``run(quick=True) -> list[str]`` of CSV rows ``name,us_per_call,derived``.
+
+Two measurement paths:
+  * ``cc_point``  — one config, one ``simulate()`` call (legacy / odd
+    one-off points).
+  * ``sweep_rows`` — a whole grid through ``repro.sweep`` (one compile per
+    shape bucket, vmapped lanes); ``us_per_call`` is the per-point
+    amortized wall time of the batched execution.
+"""
 from __future__ import annotations
 
 import sys
@@ -7,6 +15,8 @@ import time
 
 from repro.core.lock import (simulate, extract, simulate_aria, extract_aria,
                              WorkloadSpec, CostModel)
+from repro.core.lock.metrics import bench_row
+from repro.sweep import run_sweep, summarize
 
 
 def cc_point(proto, workload, threads, horizon, costs=None, name=None,
@@ -21,11 +31,13 @@ def cc_point(proto, workload, threads, horizon, costs=None, name=None,
                      costs=costs, **kw)
         r = extract(proto, threads, s)
     wall_us = (time.perf_counter() - t0) * 1e6
-    nm = name or f"{proto}_T{threads}"
-    row = (f"{nm},{wall_us:.0f},tps={r.tps:.0f};p95us={r.p95_latency_us:.0f}"
-           f";abort={r.abort_rate:.3f};lockops={r.lock_ops}"
-           f";cpu={r.cpu_util:.2f};waitfrac={r.lock_wait_frac:.2f}")
-    return row, r
+    return bench_row(name or f"{proto}_T{threads}", wall_us, r), r
+
+
+def sweep_rows(points, names=None, **sweep_kw):
+    """Run a grid through the sweep subsystem -> (csv_rows, SweepResults)."""
+    res = run_sweep(points, **sweep_kw)
+    return summarize(res, names), res
 
 
 def emit(rows):

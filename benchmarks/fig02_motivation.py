@@ -1,30 +1,35 @@
 """Fig 2: motivation. (a) MySQL hotspot update at high concurrency is
 slower than serial execution (deadlock-detection cost grows with queue).
-(b) queue locking's benefit shrinks as transaction latency grows."""
-from .common import cc_point, emit
+(b) queue locking's benefit shrinks as transaction latency grows.
+
+Runs on the sweep path: the whole figure is one (protocol × threads ×
+sync-latency) grid over a single shape bucket — one engine compile.
+"""
+from .common import emit, sweep_rows
 from repro.core.lock import WorkloadSpec, CostModel
+from repro.sweep import grid
 
 HOT = WorkloadSpec(kind="hotspot_update", txn_len=1, n_rows=512)
 
 
 def run(quick=True):
     horizon = 200_000 if quick else 1_000_000
-    rows = []
+    threads_a = [1, 64, 256, 1024] if quick else [1, 16, 64, 256, 512, 1024]
+    lats = [0, 2_000, 10_000]
+
     # (a) mysql vs threads; serial reference first
-    for t in ([1, 64, 256, 1024] if quick else [1, 16, 64, 256, 512, 1024]):
-        row, _ = cc_point("mysql", HOT, t, horizon,
-                          name=f"fig2a_mysql_T{t}")
-        rows.append(row)
+    pts = grid("mysql", HOT, threads_a, horizon=horizon,
+               name_fmt="fig2a_mysql_T{n_threads}")
     # (b) o2 benefit vs txn latency (replication sync as latency proxy)
-    for lat in [0, 2_000, 10_000]:
-        cm = CostModel(sync_lat=lat)
-        r1, a = cc_point("o2", HOT, 256, horizon, costs=cm,
-                         name=f"fig2b_o2_lat{lat}")
-        r2, b = cc_point("mysql", HOT, 256, horizon, costs=cm,
-                         name=f"fig2b_mysql_lat{lat}")
-        rows += [r1, r2,
-                 f"fig2b_ratio_lat{lat},0,o2_over_mysql="
-                 f"{a.tps / max(b.tps, 1):.2f}"]
+    pts += grid(["o2", "mysql"], HOT, 256, horizon=horizon,
+                costs=[CostModel(sync_lat=lat) for lat in lats],
+                name_fmt="fig2b_{protocol}_lat{sync_lat}")
+
+    rows, res = sweep_rows(pts)
+    for lat in lats:
+        a, b = res[f"fig2b_o2_lat{lat}"], res[f"fig2b_mysql_lat{lat}"]
+        rows.append(f"fig2b_ratio_lat{lat},0,o2_over_mysql="
+                    f"{a.tps / max(b.tps, 1):.2f}")
     return emit(rows)
 
 

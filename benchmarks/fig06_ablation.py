@@ -1,31 +1,33 @@
 """Fig 6: ablation MySQL / O1 / O2 / TXSQL(group) on FiT + SysBench
 workloads — throughput, p95 latency + lock-wait share, lock counts, CPU
-utilization; hotspot vs uniform vs scan."""
-from .common import cc_point, emit
-from repro.core.lock import WorkloadSpec
+utilization; hotspot vs uniform vs scan.
 
-FIT = WorkloadSpec(kind="fit", txn_len=2, n_rows=4096, n_hot=4)
-HOT = WorkloadSpec(kind="hotspot_update", txn_len=1, n_rows=512)
-SCAN = WorkloadSpec(kind="hotspot_scan", txn_len=10, n_rows=4096, n_hot=4)
-UNI_W = WorkloadSpec(kind="uniform", txn_len=4, n_rows=8192,
-                     write_ratio=1.0)
-UNI_R = WorkloadSpec(kind="uniform", txn_len=4, n_rows=8192,
-                     write_ratio=0.0)
+Sweep path: one grid, bucketed by workload shape (4 buckets — the two
+uniform variants share a compile since write_ratio is traced)."""
+from .common import emit, sweep_rows
+from repro.core.lock import WorkloadSpec
+from repro.sweep import grid
+
+WORKLOADS = {
+    "fit": WorkloadSpec(kind="fit", txn_len=2, n_rows=4096, n_hot=4),
+    "hotspot": WorkloadSpec(kind="hotspot_update", txn_len=1, n_rows=512),
+    "scan": WorkloadSpec(kind="hotspot_scan", txn_len=10, n_rows=4096,
+                         n_hot=4),
+    "uniform_w": WorkloadSpec(kind="uniform", txn_len=4, n_rows=8192,
+                              write_ratio=1.0),
+    "uniform_r": WorkloadSpec(kind="uniform", txn_len=4, n_rows=8192,
+                              write_ratio=0.0),
+}
 
 PROTOS = ["mysql", "o1", "o2", "group"]
 
 
 def run(quick=True):
     horizon = 200_000 if quick else 800_000
-    rows = []
-    for wname, w in [("fit", FIT), ("hotspot", HOT), ("scan", SCAN),
-                     ("uniform_w", UNI_W), ("uniform_r", UNI_R)]:
-        threads = [256] if quick else [64, 256, 1024]
-        for t in threads:
-            for p in PROTOS:
-                row, _ = cc_point(p, w, t, horizon,
-                                  name=f"fig6_{wname}_{p}_T{t}")
-                rows.append(row)
+    threads = [256] if quick else [64, 256, 1024]
+    pts = grid(PROTOS, WORKLOADS, threads, horizon=horizon,
+               name_fmt="fig6_{workload}_{protocol}_T{n_threads}")
+    rows, _ = sweep_rows(pts)
     return emit(rows)
 
 

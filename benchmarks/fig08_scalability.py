@@ -1,6 +1,11 @@
-"""Fig 8: scalability in thread count, all protocols + Aria."""
-from .common import cc_point, emit
+"""Fig 8: scalability in thread count, all protocols + Aria.
+
+Sweep path: at each pow2 thread bucket the 5 lock protocols share one
+engine compile and the Aria point its own (vs. one compile per point on
+the seed's per-config loop); buckets reuse executables across figures."""
+from .common import emit, sweep_rows
 from repro.core.lock import WorkloadSpec
+from repro.sweep import grid
 
 HOT = WorkloadSpec(kind="hotspot_update", txn_len=1, n_rows=512)
 PROTOS = ["mysql", "o1", "o2", "group", "bamboo", "aria"]
@@ -10,11 +15,9 @@ def run(quick=True):
     horizon = 200_000 if quick else 800_000
     threads = [1, 64, 256, 1024] if quick else [1, 16, 64, 128, 256, 512,
                                                 1024]
-    rows = []
-    for t in threads:
-        for p in PROTOS:
-            row, _ = cc_point(p, HOT, t, horizon, name=f"fig8_{p}_T{t}")
-            rows.append(row)
+    pts = grid(PROTOS, HOT, threads, horizon=horizon,
+               name_fmt="fig8_{protocol}_T{n_threads}")
+    rows, _ = sweep_rows(pts)
     return emit(rows)
 
 

@@ -1,31 +1,41 @@
 """Fig 10: (left) injected rollbacks -> cascading aborts for TXSQL/Bamboo;
-(right) access skewness sweep (Zipf)."""
-import dataclasses
-from .common import cc_point, emit
+(right) access skewness sweep (Zipf).
+
+Sweep path: the injection grid (protocol × p_abort) and the skew grid
+(protocol × zipf_s, skew traced via the CDF table) each share one engine
+compile; Aria skew points ride in their own bucket."""
+from .common import emit, sweep_rows
 from repro.core.lock import WorkloadSpec
+from repro.sweep import expand, grid
 
 HOTRW = WorkloadSpec(kind="hotspot_update", txn_len=4, n_rows=4096,
                      write_ratio=0.5)
+ZIPF = WorkloadSpec(kind="zipf", txn_len=1, n_rows=8192)
 
 
 def run(quick=True):
     horizon = 150_000 if quick else 600_000
-    rows = []
-    for pab in ([0.0, 0.05] if quick else [0.0, 0.01, 0.05, 0.1]):
-        for p in ["group", "bamboo"]:
-            row, r = cc_point(p, HOTRW, 128, horizon, p_abort=pab,
-                              name=f"fig10a_{p}_inj{pab}")
-            rows.append(row)
-            rows.append(
-                f"fig10a_{p}_inj{pab}_cascade,0,"
+    pabs = [0.0, 0.05] if quick else [0.0, 0.01, 0.05, 0.1]
+    sfs = [0.7, 0.99] if quick else [0.5, 0.7, 0.9, 0.99]
+
+    pts = grid(["group", "bamboo"], HOTRW, 128, horizon=horizon,
+               p_abort=pabs, name_fmt="fig10a_{protocol}_inj{p_abort}")
+    pts += grid(["mysql", "group", "bamboo", "aria"],
+                expand(ZIPF, tag_fmt="sf{zipf_s}", zipf_s=sfs),
+                256, horizon=horizon,
+                name_fmt="fig10b_{protocol}_{workload}")
+
+    rows, res = sweep_rows(pts)
+    by_name = dict(zip((p.name for p in pts), rows))
+    out = []
+    for p in pts:
+        out.append(by_name[p.name])
+        if p.name.startswith("fig10a"):
+            r = res[p.name]
+            out.append(
+                f"{p.name}_cascade,0,"
                 f"amplification={r.forced_aborts / max(r.user_aborts, 1):.1f}")
-    for sf in ([0.7, 0.99] if quick else [0.5, 0.7, 0.9, 0.99]):
-        w = WorkloadSpec(kind="zipf", txn_len=1, n_rows=8192, zipf_s=sf)
-        for p in ["mysql", "group", "bamboo", "aria"]:
-            row, _ = cc_point(p, w, 256, horizon,
-                              name=f"fig10b_{p}_sf{sf}")
-            rows.append(row)
-    return emit(rows)
+    return emit(out)
 
 
 if __name__ == "__main__":

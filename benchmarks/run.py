@@ -1,17 +1,47 @@
 """Benchmark aggregator: one module per paper figure/table.
 
 Prints ``name,us_per_call,derived`` CSV. ``--full`` widens sweeps;
-``--only fig08`` runs one module.
+``--only fig08`` runs one module; ``--json PATH`` additionally writes the
+parsed rows + per-module wall times as machine-readable JSON (e.g.
+``BENCH_run.json``) so the perf trajectory is tracked across PRs.
 """
 import argparse
+import json
 import sys
 import time
+
+
+def _parse_row(row: str) -> dict:
+    """'name,us,k=v;k=v' -> record dict (values floated where clean).
+
+    Tolerant: some modules (roofline_table) emit non-numeric columns; keep
+    the raw string rather than failing the module's whole record set.
+    """
+    name, us, derived = (row.split(",", 2) + ["", ""])[:3]
+    try:
+        us = float(us)
+    except ValueError:
+        pass
+    rec = {"name": name, "us_per_call": us}
+    metrics = {}
+    for kv in derived.split(";"):
+        if "=" not in kv:
+            continue
+        k, v = kv.split("=", 1)
+        try:
+            metrics[k] = float(v)
+        except ValueError:
+            metrics[k] = v
+    rec["derived"] = metrics
+    return rec
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write machine-readable results JSON")
     args, _ = ap.parse_known_args()
     quick = not args.full
 
@@ -31,15 +61,33 @@ def main() -> None:
         modules = {args.only: modules[args.only]}
 
     print("name,us_per_call,derived")
+    doc = {"quick": quick, "modules": {}}
     t0 = time.time()
     for name, mod in modules.items():
         print(f"# --- {name} ---")
         sys.stdout.flush()
+        tm = time.time()
         try:
-            mod.run(quick=quick)
+            rows = mod.run(quick=quick) or []
         except Exception as e:  # keep the harness going
             print(f"{name}_ERROR,0,{type(e).__name__}:{e}")
-    print(f"# total_wall_s={time.time() - t0:.0f}")
+            doc["modules"][name] = {
+                "wall_s": time.time() - tm,
+                "error": f"{type(e).__name__}: {e}",
+                "rows": [],
+            }
+            continue
+        doc["modules"][name] = {
+            "wall_s": time.time() - tm,
+            "rows": [_parse_row(r) for r in rows],
+        }
+    doc["total_wall_s"] = time.time() - t0
+    print(f"# total_wall_s={doc['total_wall_s']:.0f}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=1)
+            f.write("\n")
+        print(f"# json_written={args.json}")
 
 
 if __name__ == "__main__":

@@ -1,7 +1,9 @@
 """Concurrency-control engine: the paper's faithful reproduction layer."""
 from .costs import CostModel, ProtocolParams, protocol_params, PROTOCOLS
-from .workload import WorkloadSpec, zipf_cdf
-from .engine import (EngineConfig, SimState, init_state, run_sim, simulate,
+from .workload import (WorkloadSpec, DynWorkload, dyn_workload, zipf_cdf,
+                       zipf_cdf_table)
+from .engine import (EngineConfig, StaticShape, DynParams, split_config,
+                     SimState, init_state, init_state_dyn, run_sim, simulate,
                      START, WAIT, EXEC, CWAIT, COMMIT, RBACK, RBWAIT,
                      BACKOFF, ARRIVE, HALT)
 from .metrics import SimResult, extract, CSV_HEADER, TICKS_PER_SEC
@@ -9,7 +11,10 @@ from .aria import simulate_aria, extract_aria
 
 __all__ = [
     "CostModel", "ProtocolParams", "protocol_params", "PROTOCOLS",
-    "WorkloadSpec", "zipf_cdf",
-    "EngineConfig", "SimState", "init_state", "run_sim", "simulate",
+    "WorkloadSpec", "DynWorkload", "dyn_workload", "zipf_cdf",
+    "zipf_cdf_table",
+    "EngineConfig", "StaticShape", "DynParams", "split_config",
+    "SimState", "init_state", "init_state_dyn", "run_sim", "simulate",
     "SimResult", "extract", "CSV_HEADER", "TICKS_PER_SEC",
+    "simulate_aria", "extract_aria",
 ]

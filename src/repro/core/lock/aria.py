@@ -13,6 +13,12 @@ single-version counter rows of our engine):
 
 With a single-hotspot workload every batch commits exactly one transaction
 on the hot key — the flat-but-low TPS curve of the paper's Figure 8.
+
+Like the tick engine, all value-like parameters (costs, horizon, workload
+params, active thread count) are traced (:class:`AriaDyn`), so the sweep
+subsystem batches many Aria configs under ``jax.vmap`` with one compile per
+(kind, T, L, R) shape; padded lanes (tid >= n_active) generate transactions
+but are masked out of reservations, commits, and metrics.
 """
 from __future__ import annotations
 
@@ -25,8 +31,8 @@ import jax.numpy as jnp
 from jax import lax
 
 from .costs import CostModel
-from .workload import WorkloadSpec, gen_txn
-from .engine import I32, F32, INF, N_HIST, _hist_bucket
+from .workload import WorkloadSpec, DynWorkload, dyn_workload, gen_txn_dyn
+from .engine import I32, F32, INF, N_HIST, StaticShape, _hist_bucket
 from .metrics import SimResult, TICKS_PER_SEC
 
 BARRIER = 50  # per-batch scheduling barrier (ticks)
@@ -43,6 +49,20 @@ class AriaState(NamedTuple):
     committed_val: jnp.ndarray  # (R,)
 
 
+class AriaMetrics(NamedTuple):
+    """The leaves extract_aria reads — a cheap device_get view."""
+    now: jnp.ndarray
+    commits: jnp.ndarray
+    aborts: jnp.ndarray
+    lat_sum: jnp.ndarray
+    hist: jnp.ndarray
+
+
+def metrics_view(s: AriaState) -> AriaMetrics:
+    return AriaMetrics(now=s.now, commits=s.commits, aborts=s.aborts,
+                       lat_sum=s.lat_sum, hist=s.hist)
+
+
 @dataclasses.dataclass(frozen=True)
 class AriaConfig:
     workload: WorkloadSpec
@@ -51,27 +71,71 @@ class AriaConfig:
     horizon: int = 2_000_000
 
 
-@functools.partial(jax.jit, static_argnums=0)
-def _run(cfg: AriaConfig) -> AriaState:
-    w, c, T = cfg.workload, cfg.costs, cfg.n_threads
-    R, L = w.n_rows, w.txn_len
-    tids = jnp.arange(T, dtype=I32)
+class AriaDyn(NamedTuple):
+    """Traced Aria parameters (one vmap lane each in a sweep)."""
+    op_exec: jnp.ndarray
+    commit_base: jnp.ndarray
+    sync_lat: jnp.ndarray
+    horizon: jnp.ndarray
+    n_active: jnp.ndarray
+    wl: DynWorkload
 
-    exec_time = L * c.op_exec + BARRIER
-    batch_time = exec_time + c.commit_base + c.sync_lat
+
+def split_aria(cfg: AriaConfig, pad_threads: int | None = None,
+               pad_len: int | None = None) -> tuple[StaticShape, AriaDyn]:
+    w, c = cfg.workload, cfg.costs
+    T = pad_threads or cfg.n_threads
+    L = pad_len or w.txn_len
+    assert T >= cfg.n_threads and L >= w.txn_len
+    stat = StaticShape(kind=w.kind, n_threads=T, txn_len=L, n_rows=w.n_rows)
+    dp = AriaDyn(
+        op_exec=jnp.asarray(c.op_exec, I32),
+        commit_base=jnp.asarray(c.commit_base, I32),
+        sync_lat=jnp.asarray(c.sync_lat, I32),
+        horizon=jnp.asarray(cfg.horizon, I32),
+        n_active=jnp.asarray(cfg.n_threads, I32),
+        wl=dyn_workload(w),
+    )
+    return stat, dp
+
+
+def init_aria_state(stat: StaticShape) -> AriaState:
+    T, R = stat.n_threads, stat.n_rows
+    return AriaState(
+        txn=jnp.zeros((T,), I32), retries=jnp.zeros((T,), I32),
+        now=jnp.asarray(0, I32), commits=jnp.asarray(0, I32),
+        aborts=jnp.asarray(0, I32), lat_sum=jnp.asarray(0.0, F32),
+        hist=jnp.zeros((N_HIST,), I32),
+        committed_val=jnp.zeros((R,), I32),
+    )
+
+
+def _run_core(stat: StaticShape, dp: AriaDyn) -> AriaState:
+    T, R, L = stat.n_threads, stat.n_rows, stat.txn_len
+    tids = jnp.arange(T, dtype=I32)
+    active = tids < dp.n_active
+
+    # active (not padded) txn length sets the batch execution time
+    exec_time = dp.wl.txn_len * dp.op_exec + BARRIER
+    batch_time = exec_time + dp.commit_base + dp.sync_lat
+
+    # padded lanes (rows) and padded op slots (cols) reserve/read nothing
+    slot_ok = jnp.arange(L, dtype=I32)[None, :] < dp.wl.txn_len
 
     def batch(s: AriaState) -> AriaState:
-        keys, iswr, dup, _ = gen_txn(w, tids, s.txn)
+        keys, iswr, dup, _ = gen_txn_dyn(stat.kind, R, L, dp.wl, tids, s.txn)
         lane = jnp.broadcast_to(tids[:, None], (T, L))
+        live = active[:, None] & slot_ok
+        iswr = iswr & live
 
         # reservations: smallest lane id wins each written key
         wr_res = jax.ops.segment_min(
             jnp.where(iswr, lane, INF).reshape(-1),
             keys.reshape(-1), num_segments=R)
         waw = (iswr & (wr_res[keys] < lane)).any(axis=1)
-        raw = (~iswr & (wr_res[keys] < lane)).any(axis=1)
+        raw = (~iswr & live & (wr_res[keys] < lane)).any(axis=1)
         abort = waw | raw
-        commit = ~abort
+        commit = ~abort & active
 
         committed_val = s.committed_val + jax.ops.segment_sum(
             jnp.where(iswr & commit[:, None], 1, 0).reshape(-1),
@@ -92,21 +156,27 @@ def _run(cfg: AriaConfig) -> AriaState:
             committed_val=committed_val,
         )
 
-    s0 = AriaState(
-        txn=jnp.zeros((T,), I32), retries=jnp.zeros((T,), I32),
-        now=jnp.asarray(0, I32), commits=jnp.asarray(0, I32),
-        aborts=jnp.asarray(0, I32), lat_sum=jnp.asarray(0.0, F32),
-        hist=jnp.zeros((N_HIST,), I32),
-        committed_val=jnp.zeros((R,), I32),
-    )
-    return lax.while_loop(lambda s: s.now < cfg.horizon, batch, s0)
+    return lax.while_loop(lambda s: s.now < dp.horizon, batch,
+                          init_aria_state(stat))
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def _run_dyn(stat: StaticShape, dp: AriaDyn) -> AriaState:
+    return _run_core(stat, dp)
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def _run_batch(stat: StaticShape, dps: AriaDyn) -> AriaState:
+    """Run G stacked Aria configs as one vmapped program."""
+    return jax.vmap(lambda dp: _run_core(stat, dp))(dps)
 
 
 def simulate_aria(workload: WorkloadSpec, n_threads: int,
                   costs: CostModel | None = None,
                   horizon: int = 2_000_000) -> AriaState:
-    return _run(AriaConfig(workload, costs or CostModel(),
-                           n_threads, horizon))
+    stat, dp = split_aria(AriaConfig(workload, costs or CostModel(),
+                                     n_threads, horizon))
+    return _run_dyn(stat, dp)
 
 
 def extract_aria(n_threads: int, s: AriaState) -> SimResult:

@@ -31,6 +31,19 @@ The per-row value is modeled as a counter: every applied write is +1 and
 every rollback is -1, so serializability is *checkable*: at quiescence the
 counter must equal the number of committed writes (no lost updates, no
 dirty leftovers) — see tests/test_lock_properties.py.
+
+Batching (DESIGN.md §3): every protocol flag, cost constant, and workload
+parameter is a **traced jnp scalar** carried in :class:`DynParams`; the only
+static compile keys are the array shapes (T, L, R) and the workload kind
+(:class:`StaticShape`). Protocol branches are computed unconditionally and
+selected with masks, so one compiled program serves *every* protocol /
+timeout / abort-rate / skew combination at a given shape — and the sweep
+subsystem (``repro.sweep``) can stack G configs and run them under
+``jax.vmap`` as one program. ``simulate()`` routes through the very same
+dynamic step, which makes vmapped-lane results bit-identical to per-config
+runs by construction. Threads and op slots are padded to the grid max:
+padded threads start in HALT and never act; padded slots never execute
+(``nops`` stops the op cursor first), so padding is bitwise invisible.
 """
 from __future__ import annotations
 
@@ -44,7 +57,8 @@ import jax.numpy as jnp
 from jax import lax
 
 from .costs import CostModel, ProtocolParams, protocol_params
-from .workload import WorkloadSpec, gen_txn, will_abort
+from .workload import (WorkloadSpec, DynWorkload, dyn_workload, gen_txn_dyn,
+                       will_abort_dyn)
 
 I32 = jnp.int32
 F32 = jnp.float32
@@ -69,6 +83,91 @@ class EngineConfig:
     drain: bool = False               # run until all threads quiesce
     max_iters: int = 1_500_000
     seed: int = 0
+
+
+class StaticShape(NamedTuple):
+    """The compile key: everything that picks the program, nothing else."""
+    kind: str           # workload kind
+    n_threads: int      # padded thread count T
+    txn_len: int        # padded op-slot count L
+    n_rows: int         # key space R
+
+
+class DynParams(NamedTuple):
+    """Traced per-config parameters (one vmap lane each in a sweep).
+
+    Protocol flags are jnp bools, costs jnp ints/floats; semantics match
+    ``ProtocolParams`` / ``CostModel`` / ``EngineConfig`` field-for-field.
+    ``n_active`` masks padded threads (tid >= n_active start in HALT).
+    """
+    # --- protocol ---
+    lock_base: jnp.ndarray
+    grant_cost: jnp.ndarray
+    dd_coeff: jnp.ndarray
+    has_detection: jnp.ndarray
+    hot_queue: jnp.ndarray
+    early_release: jnp.ndarray
+    early_all: jnp.ndarray
+    group_lock: jnp.ndarray
+    group_commit: jnp.ndarray
+    dynamic_batch: jnp.ndarray
+    batch_size: jnp.ndarray
+    hot_threshold: jnp.ndarray
+    proactive_abort: jnp.ndarray
+    wait_timeout: jnp.ndarray
+    commit_wait_timeout: jnp.ndarray
+    # --- costs ---
+    op_exec: jnp.ndarray
+    read_exec: jnp.ndarray
+    commit_base: jnp.ndarray
+    sync_lat: jnp.ndarray
+    rb_base: jnp.ndarray
+    rb_per_op: jnp.ndarray
+    backoff: jnp.ndarray
+    arrival_rate: jnp.ndarray
+    rb_turn_timeout: jnp.ndarray
+    # --- run ---
+    horizon: jnp.ndarray
+    p_abort: jnp.ndarray
+    drain: jnp.ndarray
+    max_iters: jnp.ndarray
+    n_active: jnp.ndarray
+    # --- workload ---
+    wl: DynWorkload
+
+
+def split_config(cfg: EngineConfig, pad_threads: int | None = None,
+                 pad_len: int | None = None) -> tuple[StaticShape, DynParams]:
+    """EngineConfig -> (compile key, traced params). Eager — not for jit."""
+    p, c, w = cfg.protocol, cfg.costs, cfg.workload
+    T = pad_threads or cfg.n_threads
+    L = pad_len or w.txn_len
+    assert T >= cfg.n_threads and L >= w.txn_len
+    stat = StaticShape(kind=w.kind, n_threads=T, txn_len=L, n_rows=w.n_rows)
+    i32 = lambda v: jnp.asarray(v, I32)
+    f32 = lambda v: jnp.asarray(v, F32)
+    b = lambda v: jnp.asarray(v, bool)
+    dp = DynParams(
+        lock_base=i32(p.lock_base), grant_cost=i32(p.grant_cost),
+        dd_coeff=f32(p.dd_coeff), has_detection=b(p.has_detection),
+        hot_queue=b(p.hot_queue), early_release=b(p.early_release),
+        early_all=b(p.early_all), group_lock=b(p.group_lock),
+        group_commit=b(p.group_commit), dynamic_batch=b(p.dynamic_batch),
+        batch_size=i32(p.batch_size), hot_threshold=i32(p.hot_threshold),
+        proactive_abort=b(p.proactive_abort),
+        wait_timeout=i32(p.wait_timeout),
+        commit_wait_timeout=i32(p.commit_wait_timeout),
+        op_exec=i32(c.op_exec), read_exec=i32(c.read_exec),
+        commit_base=i32(c.commit_base), sync_lat=i32(c.sync_lat),
+        rb_base=i32(c.rb_base), rb_per_op=i32(c.rb_per_op),
+        backoff=i32(c.backoff), arrival_rate=f32(c.arrival_rate),
+        rb_turn_timeout=i32(c.rb_turn_timeout),
+        horizon=i32(cfg.horizon), p_abort=f32(cfg.p_abort),
+        drain=b(cfg.drain), max_iters=i32(cfg.max_iters),
+        n_active=i32(cfg.n_threads),
+        wl=dyn_workload(w),
+    )
+    return stat, dp
 
 
 class Threads(NamedTuple):
@@ -151,6 +250,13 @@ def _hist_bucket(lat):
     return jnp.clip(b.astype(I32), 0, N_HIST - 1)
 
 
+def _stop_time(dp: DynParams):
+    """Drain gets enough wall-clock past the horizon for timeouts to fire
+    and cascades to unwind (livelocks then surface as drain failures)."""
+    drain_stop = dp.horizon + 3 * jnp.maximum(dp.wait_timeout, dp.horizon)
+    return jnp.where(dp.drain, drain_stop, dp.horizon)
+
+
 class Derived(NamedTuple):
     us: jnp.ndarray           # (R,) next grantable ticket
     cc: jnp.ndarray           # (R,) commit cursor (lowest uncommitted applied)
@@ -162,9 +268,9 @@ class Derived(NamedTuple):
     napp: jnp.ndarray         # (T,) applied op count per thread
 
 
-def _derive(cfg: EngineConfig, th: Threads, rows: Rows) -> Derived:
-    R = cfg.workload.n_rows
-    p = cfg.protocol
+def _derive(stat: StaticShape, dp: DynParams, th: Threads,
+            rows: Rows) -> Derived:
+    R = stat.n_rows
     T, L = th.keys.shape
     live = th.ticket >= 0                                    # (T, L)
     keyf = th.keys
@@ -179,8 +285,7 @@ def _derive(cfg: EngineConfig, th: Threads, rows: Rows) -> Derived:
     # Commit cursor: with group commit, entering the commit queue releases
     # the *order* dependency (the batch syncs together, Fig. 5c); without
     # it, the dependency holds until the commit completes (slot cleared).
-    cc_block = appl & (~th.committing if p.group_commit else
-                       jnp.ones_like(appl))
+    cc_block = appl & (~th.committing | ~dp.group_commit)
     cc = _seg_min(th.ticket, keyf, R, cc_block)
     cc = jnp.where(cc == INF, us, cc)
     top = _seg_max(th.ticket, keyf, R, appl & ~th.committing)
@@ -205,19 +310,16 @@ def _derive(cfg: EngineConfig, th: Threads, rows: Rows) -> Derived:
 # engine step
 # ---------------------------------------------------------------------------
 
-def _make_step(cfg: EngineConfig):
-    p = cfg.protocol
-    c = cfg.costs
-    w = cfg.workload
-    T = cfg.n_threads
-    R = w.n_rows
-    L = w.txn_len
+def _make_step(stat: StaticShape, dp: DynParams):
+    """Build the tick-step function. ``stat`` is static (shapes + kind);
+    every parameter in ``dp`` is traced, so protocol branches are computed
+    unconditionally and masked — the price of one program for all configs.
+    """
+    T = stat.n_threads
+    R = stat.n_rows
+    L = stat.txn_len
     tids = jnp.arange(T, dtype=I32)
-
-    # drain gets enough wall-clock past the horizon for timeouts to fire
-    # and cascades to unwind (livelocks then surface as drain failures)
-    stop_time = (cfg.horizon + 3 * max(p.wait_timeout, cfg.horizon)
-                 if cfg.drain else cfg.horizon)
+    stop_time = _stop_time(dp)
 
     def cur(field_tl, oph):
         """Gather per-thread value at its current op slot (clipped)."""
@@ -225,7 +327,7 @@ def _make_step(cfg: EngineConfig):
 
     def step(s: SimState) -> SimState:
         th, rows, g = s
-        d = _derive(cfg, th, rows)
+        d = _derive(stat, dp, th, rows)
         now = g.now
 
         cur_key = cur(th.keys, th.op)
@@ -234,40 +336,45 @@ def _make_step(cfg: EngineConfig):
 
         # ------------------------------------------------ 1. mark aborts
         forced = th.forced
-        # 1a. wait timeout
-        if p.wait_timeout > 0:
-            to = in_wait & ((now - th.wstart) >= p.wait_timeout)
-            to |= (th.phase == CWAIT) & (
-                (now - th.wstart) >= p.commit_wait_timeout)
-            forced = forced | to
+        # 1a. wait timeout (wait_timeout <= 0 disables both timeouts)
+        to = in_wait & ((now - th.wstart) >= dp.wait_timeout)
+        to |= (th.phase == CWAIT) & (
+            (now - th.wstart) >= dp.commit_wait_timeout)
+        forced = forced | (to & (dp.wait_timeout > 0))
         # 1b. deadlock detection (waits-for cycle walk, up to 8 hops),
         # 2PL-style protocols. One victim per cycle: its max thread id.
-        if p.has_detection:
-            succ = jnp.where(in_wait, d.holder[cur_key], NOTK)
+        # lax.cond so single-config runs of detection-free protocols skip
+        # the walk at runtime; vmapped lanes lower it to a select.
+        def _walk_cycle(op):
+            in_wait_, phase_, holder_at = op
+            succ = jnp.where(in_wait_, holder_at, NOTK)
             succ = jnp.where(succ == tids, NOTK, succ)   # self-wait: none
             walk = succ
             mx = tids
-            on_cycle = jnp.zeros_like(in_wait)
+            on_cycle = jnp.zeros_like(in_wait_)
             for _ in range(8):
                 ok = walk >= 0
                 wi = jnp.where(ok, walk, 0)
                 mx = jnp.maximum(mx, jnp.where(ok, walk, -1))
                 on_cycle = on_cycle | (ok & (walk == tids))
                 # follow only through threads that are themselves waiting
-                walk = jnp.where(ok & (th.phase[wi] == WAIT),
+                walk = jnp.where(ok & (phase_[wi] == WAIT),
                                  succ[wi], NOTK)
-            victim = on_cycle & (tids == mx)
-            forced = forced | victim
+            return on_cycle & (tids == mx)
+
+        victim = lax.cond(dp.has_detection, _walk_cycle,
+                          lambda op: jnp.zeros_like(op[0]),
+                          (in_wait, th.phase, d.holder[cur_key]))
+        forced = forced | victim
         # 1c. proactive hot+non-hot rollback (§4.5)
-        if p.proactive_abort:
-            hrow = d.hotof
-            hold = d.holder[cur_key]
-            hold_ok = hold >= 0
-            hold_i = jnp.where(hold_ok, hold, 0)
-            pro = (in_wait & (hrow >= 0) & hold_ok
-                   & ~rows.hot[cur_key]
-                   & (d.hotof[hold_i] == hrow) & (hold != tids))
-            forced = forced | pro
+        hrow = d.hotof
+        hold = d.holder[cur_key]
+        hold_ok = hold >= 0
+        hold_i = jnp.where(hold_ok, hold, 0)
+        pro = (in_wait & (hrow >= 0) & hold_ok
+               & ~rows.hot[cur_key]
+               & (d.hotof[hold_i] == hrow) & (hold != tids))
+        forced = forced | (pro & dp.proactive_abort)
         # 1d. cascade propagation: any applied early ticket >= casc[key]
         casc_at = rows.casc[th.keys]                          # (T, L)
         hit = (th.applied & th.early & (th.ticket >= 0)
@@ -305,26 +412,22 @@ def _make_step(cfg: EngineConfig):
                      & ~rows.updating[key_w]
                      & (rows.casc[key_w] == INF))
         # group locking: leader/follower bookkeeping
-        if p.group_lock:
-            open_leader = rows.gleader[key_w]
-            is_leader_grant = grantable & hot_w & (open_leader == NOTK)
-            is_member_grant = grantable & hot_w & (open_leader != NOTK)
-        else:
-            is_leader_grant = jnp.zeros_like(grantable)
-            is_member_grant = jnp.zeros_like(grantable)
+        open_leader = rows.gleader[key_w]
+        is_leader_grant = (grantable & hot_w & (open_leader == NOTK)
+                           & dp.group_lock)
+        is_member_grant = (grantable & hot_w & (open_leader != NOTK)
+                           & dp.group_lock)
 
         qlen = d2.n_wait[key_w].astype(F32)
-        if p.has_detection:
-            dd = (p.dd_coeff * qlen).astype(I32)
-        else:
-            dd = jnp.zeros_like(cur_tkt)
-        hotq = hot_w if p.hot_queue else jnp.zeros_like(hot_w)
+        dd = jnp.where(dp.has_detection,
+                       (dp.dd_coeff * qlen).astype(I32), 0)
+        hotq = hot_w & dp.hot_queue
         overhead = jnp.where(
             hotq,
-            jnp.where(is_leader_grant | ~jnp.asarray(p.group_lock),
-                      I32(p.lock_base), I32(p.grant_cost)),
-            I32(p.lock_base) + dd)
-        work_g = overhead + I32(c.op_exec)
+            jnp.where(is_leader_grant | ~dp.group_lock,
+                      dp.lock_base, dp.grant_cost),
+            dp.lock_base + dd)
+        work_g = overhead + dp.op_exec
 
         th = th._replace(
             phase=jnp.where(grantable, EXEC, th.phase),
@@ -338,21 +441,26 @@ def _make_step(cfg: EngineConfig):
         upd_new = _seg_max(jnp.ones_like(key_w), key_w, R,
                            grantable) > 0
         rows = rows._replace(updating=rows.updating | upd_new)
-        if p.group_lock:
-            gl = rows.gleader
+
+        # group bookkeeping: without group locking gleader stays NOTK and
+        # gcount 0, so the off branch is the identity (runtime-skipped for
+        # single-config non-group runs, select under vmap).
+        def _glock_on(op):
+            gl, gc = op
             gl = gl.at[key_w].max(jnp.where(is_leader_grant, cur_tkt, NOTK),
                                   mode="drop")
-            gc = rows.gcount.at[key_w].add(
+            gc = gc.at[key_w].add(
                 jnp.where(is_leader_grant | is_member_grant, 1, 0),
                 mode="drop")
             # close full groups; dynamic close when queue drained
-            closed_full = gc >= p.batch_size
-            closed_dyn = (jnp.asarray(p.dynamic_batch)
-                          & (d2.n_wait == 0) & ~upd_new)
+            closed_full = gc >= dp.batch_size
+            closed_dyn = dp.dynamic_batch & (d2.n_wait == 0) & ~upd_new
             close = (gl != NOTK) & (closed_full | closed_dyn)
-            rows = rows._replace(
-                gleader=jnp.where(close, NOTK, gl),
-                gcount=jnp.where(close, 0, gc))
+            return (jnp.where(close, NOTK, gl), jnp.where(close, 0, gc))
+
+        gl, gc = lax.cond(dp.group_lock, _glock_on, lambda op: op,
+                          (rows.gleader, rows.gcount))
+        rows = rows._replace(gleader=gl, gcount=gc)
 
         # 4b. CWAIT -> COMMIT (commit order on early rows; leader hold)
         is_cw = (th.phase == CWAIT) & ~th.forced
@@ -361,40 +469,46 @@ def _make_step(cfg: EngineConfig):
         order_ok = jnp.where(live & th.applied & th.early,
                              cc_at == th.ticket, True).all(axis=1)
         no_casc = jnp.where(live, rows.casc[th.keys] == INF, True).all(axis=1)
-        if p.group_lock:
-            lead_open = jnp.where(
-                live & th.applied & th.early,
-                rows.gleader[th.keys] == th.ticket, False).any(axis=1)
-        else:
-            lead_open = jnp.zeros((T,), bool)
+        lead_open = (jnp.where(live & th.applied & th.early,
+                               rows.gleader[th.keys] == th.ticket,
+                               False).any(axis=1)
+                     & dp.group_lock)
         can_commit = is_cw & order_ok & no_casc & ~lead_open
         # injected aborts divert to rollback at the commit point
         vol = can_commit & th.willab
         can_commit = can_commit & ~th.willab
 
-        base_cost = I32(c.commit_base + c.sync_lat)
-        if p.group_commit and c.sync_lat > 0:
-            # Group commit (Fig. 5c): while a hot row's sync window is in
-            # flight, arriving commits of that row join it (binlog group
-            # commit semantics); a new window starts only when the device
-            # is free, so windows serialize. Amortization factor is thus
-            # arrival-limited (~sync_lat / update-chain spacing).
+        base_cost = dp.commit_base + dp.sync_lat
+
+        # Group commit (Fig. 5c): while a hot row's sync window is in
+        # flight, arriving commits of that row join it (binlog group
+        # commit semantics); a new window starts only when the device
+        # is free, so windows serialize. Amortization factor is thus
+        # arrival-limited (~sync_lat / update-chain spacing). Off branch:
+        # cost = base, no window bookkeeping.
+        def _gcommit_on(op):
+            batch_end, batch_n = op
             hrow = d2.hotof
             h_ok = hrow >= 0
             hrow_i = jnp.where(h_ok, hrow, 0)
-            be = rows.batch_end[hrow_i]
+            be = batch_end[hrow_i]
             join = can_commit & h_ok & (be > now)
             fresh = can_commit & h_ok & ~join
-            cost = jnp.where(join, (be - now) + I32(c.commit_base),
-                             base_cost)
-            nbe = rows.batch_end.at[hrow_i].max(
-                jnp.where(fresh, now + I32(c.sync_lat), 0), mode="drop")
-            rows = rows._replace(
-                batch_end=nbe,
-                batch_n=rows.batch_n.at[hrow_i].add(
-                    jnp.where(can_commit & h_ok, 1, 0), mode="drop"))
-        else:
-            cost = jnp.broadcast_to(base_cost, (T,))
+            cost = jnp.where(join, (be - now) + dp.commit_base,
+                             jnp.broadcast_to(base_cost, (T,)))
+            nbe = batch_end.at[hrow_i].max(
+                jnp.where(fresh, now + dp.sync_lat, 0), mode="drop")
+            nbn = batch_n.at[hrow_i].add(
+                jnp.where(can_commit & h_ok, 1, 0), mode="drop")
+            return nbe, nbn, cost
+
+        def _gcommit_off(op):
+            return op[0], op[1], jnp.broadcast_to(base_cost, (T,))
+
+        nbe, nbn, cost = lax.cond(dp.group_commit & (dp.sync_lat > 0),
+                                  _gcommit_on, _gcommit_off,
+                                  (rows.batch_end, rows.batch_n))
+        rows = rows._replace(batch_end=nbe, batch_n=nbn)
         th = th._replace(
             phase=jnp.where(can_commit, COMMIT,
                             jnp.where(vol, RBWAIT, th.phase)),
@@ -414,9 +528,9 @@ def _make_step(cfg: EngineConfig):
         my_turn = jnp.where(ea, top_at == th.ticket, True).all(axis=1)
         # multi-row cascade cycles (paper §6.5's excluded case) break via
         # an out-of-order rollback after rb_turn_timeout
-        my_turn = my_turn | ((now - th.wstart) >= c.rb_turn_timeout)
+        my_turn = my_turn | ((now - th.wstart) >= dp.rb_turn_timeout)
         start_rb = (th.phase == RBWAIT) & my_turn
-        rb_work = c.rb_base + c.rb_per_op * d.napp
+        rb_work = dp.rb_base + dp.rb_per_op * d.napp
         th = th._replace(
             phase=jnp.where(start_rb, RBACK, th.phase),
             work=jnp.where(start_rb, rb_work, th.work))
@@ -427,13 +541,11 @@ def _make_step(cfg: EngineConfig):
                   | (th.phase == ARRIVE))
         starting = th.phase == START
         dt_pay = jnp.where(paying, th.work, INF).min()
-        if p.wait_timeout > 0:
-            texp = jnp.where(in_wait | (th.phase == CWAIT),
-                             th.wstart + p.wait_timeout - now, INF).min()
-        else:
-            texp = INF
+        texp = jnp.where((in_wait | (th.phase == CWAIT))
+                         & (dp.wait_timeout > 0),
+                         th.wstart + dp.wait_timeout - now, INF).min()
         rb_exp = jnp.where(th.phase == RBWAIT,
-                           th.wstart + c.rb_turn_timeout - now, INF).min()
+                           th.wstart + dp.rb_turn_timeout - now, INF).min()
         texp = jnp.minimum(texp, jnp.maximum(rb_exp, 1))
         dt = jnp.minimum(dt_pay, jnp.maximum(texp, 1))
         dt = jnp.where(starting.any(), 0, dt)       # starts are instant
@@ -463,12 +575,7 @@ def _make_step(cfg: EngineConfig):
         applied = th.applied.at[tids, opc].set(
             jnp.where(eff_wr, True, cur(th.applied, th.op)))
         # freeze the release semantics that were in force when we applied
-        if p.early_all:
-            early_now = jnp.ones_like(eff_wr)
-        elif p.early_release:
-            early_now = rows.hot[cur_key]
-        else:
-            early_now = jnp.zeros_like(eff_wr)
+        early_now = dp.early_all | (dp.early_release & rows.hot[cur_key])
         early = th.early.at[tids, opc].set(
             jnp.where(eff_wr, early_now, cur(th.early, th.op)))
         th = th._replace(applied=applied, early=early)
@@ -524,7 +631,7 @@ def _make_step(cfg: EngineConfig):
         th = th._replace(
             phase=jnp.where(c_done | b_done, START,
                             jnp.where(r_done, BACKOFF, th.phase)),
-            work=jnp.where(r_done, c.backoff * jitter, th.work),
+            work=jnp.where(r_done, dp.backoff * jitter, th.work),
             txn=th.txn + jnp.where(c_done | (r_done & th.vabort), 1, 0),
             retry=jnp.where(r_done & ~th.vabort, True,
                             jnp.where(c_done, False, th.retry)),
@@ -538,19 +645,25 @@ def _make_step(cfg: EngineConfig):
 
         # ------------------------------------------------ 7. START new txns
         st = th.phase == START
-        past = now >= cfg.horizon
+        past = now >= dp.horizon
         th = th._replace(phase=jnp.where(st & past, HALT, th.phase))
         st = st & ~past
-        if c.arrival_rate > 0:
-            interval = max(int(T / c.arrival_rate), 1)
-            arr = th.txn * interval + (tids * 977) % interval
-            early_t = st & (arr > now)
-            th = th._replace(
-                phase=jnp.where(early_t, ARRIVE, th.phase),
-                work=jnp.where(early_t, arr - now, th.work))
-            st = st & ~early_t
-        keys, iswr, dup, nops = gen_txn(w, tids, th.txn)
-        wab = will_abort(w, cfg.p_abort, tids, th.txn)
+        # fixed-TPS open loop: arrival_rate <= 0 means closed loop (no gate).
+        # n_active (not the padded T) sets the per-thread arrival interval.
+        rate_on = dp.arrival_rate > 0
+        interval = jnp.maximum(
+            (dp.n_active.astype(F32)
+             / jnp.where(rate_on, dp.arrival_rate, F32(1.0))).astype(I32),
+            1)
+        arr = th.txn * interval + (tids * 977) % interval
+        early_t = st & (arr > now) & rate_on
+        th = th._replace(
+            phase=jnp.where(early_t, ARRIVE, th.phase),
+            work=jnp.where(early_t, arr - now, th.work))
+        st = st & ~early_t
+        keys, iswr, dup, nops = gen_txn_dyn(stat.kind, R, L, dp.wl,
+                                            tids, th.txn)
+        wab = will_abort_dyn(dp.wl.seed, dp.p_abort, tids, th.txn)
         sel = st[:, None]
         th = th._replace(
             keys=jnp.where(sel, keys, th.keys),
@@ -569,7 +682,7 @@ def _make_step(cfg: EngineConfig):
         bwr = cur(th.iswr, th.op) & ~cur(th.dup, th.op)
         need_ticket = begin & bwr
         direct = begin & ~bwr
-        rd_cost = jnp.where(cur(th.iswr, th.op), c.op_exec, c.read_exec)
+        rd_cost = jnp.where(cur(th.iswr, th.op), dp.op_exec, dp.read_exec)
         th = th._replace(
             phase=jnp.where(direct, EXEC, th.phase),
             work=jnp.where(direct, rd_cost, th.work))
@@ -598,19 +711,26 @@ def _make_step(cfg: EngineConfig):
             wstart=jnp.where(need_ticket, now, th.wstart))
 
         # ------------------------------------------------ 9. hotspot detect
-        if p.hot_queue:
+        # without a hotspot queue rows never turn hot, so the off branch
+        # is the identity (runtime-skipped; select under vmap).
+        def _hotspot_on(op):
+            hot, gleader, gcount = op
             live3 = th.ticket >= 0
             d3_nwait = _seg_sum(jnp.ones_like(th.ticket), th.keys, R,
                                 live3 & ~th.applied)
             d3_nlive = _seg_sum(jnp.ones_like(th.ticket), th.keys, R, live3)
-            promote = d3_nwait > p.hot_threshold
+            promote = d3_nwait > dp.hot_threshold
             # demote only when the row is fully quiesced: no waiter AND no
             # applied-uncommitted update (the dep list must be empty, §4.1)
-            demote = rows.hot & (d3_nlive == 0)
-            rows = rows._replace(
-                hot=(rows.hot | promote) & ~demote,
-                gleader=jnp.where(demote, NOTK, rows.gleader),
-                gcount=jnp.where(demote, 0, rows.gcount))
+            demote = hot & (d3_nlive == 0)
+            return ((hot | promote) & ~demote,
+                    jnp.where(demote, NOTK, gleader),
+                    jnp.where(demote, 0, gcount))
+
+        hot, gleader, gcount = lax.cond(
+            dp.hot_queue, _hotspot_on, lambda op: op,
+            (rows.hot, rows.gleader, rows.gcount))
+        rows = rows._replace(hot=hot, gleader=gleader, gcount=gcount)
 
         return SimState(th, rows, g)
 
@@ -621,10 +741,12 @@ def _make_step(cfg: EngineConfig):
 # public API
 # ---------------------------------------------------------------------------
 
-def init_state(cfg: EngineConfig) -> SimState:
-    T, L, R = cfg.n_threads, cfg.workload.txn_len, cfg.workload.n_rows
+def init_state_dyn(stat: StaticShape, dp: DynParams) -> SimState:
+    """Initial state at the padded shape; padded threads start in HALT."""
+    T, L, R = stat.n_threads, stat.txn_len, stat.n_rows
+    tids = jnp.arange(T, dtype=I32)
     th = Threads(
-        phase=jnp.zeros((T,), I32),
+        phase=jnp.where(tids < dp.n_active, I32(START), I32(HALT)),
         work=jnp.zeros((T,), I32),
         op=jnp.zeros((T,), I32),
         txn=jnp.zeros((T,), I32),
@@ -670,24 +792,48 @@ def init_state(cfg: EngineConfig) -> SimState:
     return SimState(th, rows, g)
 
 
-@functools.partial(jax.jit, static_argnums=0)
-def _run(cfg: EngineConfig, s0: SimState) -> SimState:
-    step = _make_step(cfg)
-    stop_time = (cfg.horizon
-                 + 3 * max(cfg.protocol.wait_timeout, cfg.horizon)
-                 if cfg.drain else cfg.horizon)
+def init_state(cfg: EngineConfig) -> SimState:
+    """Initial state for a single (unpadded) config."""
+    return init_state_dyn(*split_config(cfg))
+
+
+def _run_core(stat: StaticShape, dp: DynParams, s0: SimState) -> SimState:
+    """The loop itself — shared verbatim by the jitted single-config entry
+    point and the vmapped sweep entry point (bitwise parity depends on it).
+    """
+    step = _make_step(stat, dp)
+    stop_time = _stop_time(dp)
 
     def cond(s: SimState):
-        running = ((s.th.phase != HALT).any() & (s.g.now < stop_time)
-                   if cfg.drain else (s.g.now < cfg.horizon))
-        return running & (s.g.iters < cfg.max_iters)
+        live = (s.th.phase != HALT).any()
+        running = jnp.where(dp.drain,
+                            live & (s.g.now < stop_time),
+                            s.g.now < dp.horizon)
+        return running & (s.g.iters < dp.max_iters)
 
     return lax.while_loop(cond, step, s0)
 
 
+@functools.partial(jax.jit, static_argnums=0)
+def _run_dyn(stat: StaticShape, dp: DynParams, s0: SimState) -> SimState:
+    return _run_core(stat, dp, s0)
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def _run_batch(stat: StaticShape, dps: DynParams, s0s: SimState) -> SimState:
+    """Run G stacked configs as one program (leading axis on every leaf).
+
+    ``lax.while_loop`` under vmap keeps stepping until every lane's cond is
+    false, select-freezing finished lanes — so each lane's final state is
+    bit-identical to running it alone at the same (padded) shape.
+    """
+    return jax.vmap(lambda dp, s0: _run_core(stat, dp, s0))(dps, s0s)
+
+
 def run_sim(cfg: EngineConfig) -> SimState:
     """Run a simulation to completion and return the final state."""
-    return _run(cfg, init_state(cfg))
+    stat, dp = split_config(cfg)
+    return _run_dyn(stat, dp, init_state_dyn(stat, dp))
 
 
 def simulate(protocol: str, workload: WorkloadSpec, n_threads: int,

@@ -49,7 +49,12 @@ def _pct_from_hist(hist: np.ndarray, q: float) -> float:
 
 
 def extract(protocol: str, n_threads: int, s: SimState) -> SimResult:
-    g = s.g
+    return extract_globals(protocol, n_threads, s.g)
+
+
+def extract_globals(protocol: str, n_threads: int, g) -> SimResult:
+    """Extract from the Globals leaf alone (all metrics live there) — the
+    sweep runner uses this to avoid hauling full states off device."""
     commits = int(g.commits)
     aborts = int(g.user_aborts) + int(g.forced_aborts)
     now = max(int(g.now), 1)
@@ -78,3 +83,13 @@ def extract(protocol: str, n_threads: int, s: SimState) -> SimResult:
 
 CSV_HEADER = ("protocol,threads,tps,mean_lat_us,p95_lat_us,abort_rate,"
               "lock_ops,cpu_util,lock_wait_frac")
+
+
+def bench_row(name: str, wall_us: float, r: SimResult) -> str:
+    """The benchmark harness's ``name,us_per_call,derived`` row — shared by
+    the per-config path (benchmarks.common.cc_point) and the sweep path
+    (repro.sweep.summarize) so the two dialects can't drift apart."""
+    return (f"{name},{wall_us:.0f},"
+            f"tps={r.tps:.0f};p95us={r.p95_latency_us:.0f}"
+            f";abort={r.abort_rate:.3f};lockops={r.lock_ops}"
+            f";cpu={r.cpu_util:.2f};waitfrac={r.lock_wait_frac:.2f}")

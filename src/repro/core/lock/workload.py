@@ -19,16 +19,26 @@ Workload kinds (mirroring the paper's §6.1.1):
   - ``tpcc``            TPC-C-like: op 0 writes warehouse row (W rows),
                         op 1 writes district row (10 per warehouse),
                         remaining ops mixed uniform (stock/customer).
+
+Traceability (DESIGN.md §3.1): everything *value-like* about a workload —
+write ratio, hot-set size, seed, the Zipf CDF table, the active txn length —
+lives in :class:`DynWorkload`, a NamedTuple of jnp scalars (plus the (R,)
+CDF array) that the sweep subsystem stacks along a config axis and feeds
+through ``jax.vmap``. Only the *shape-like* facts stay static: the kind
+string, ``n_rows`` (R), and the padded slot count L. The Zipf CDF is
+computed **eagerly** (outside any jit) so a vmapped lane and a per-config
+run consume bit-identical tables.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import numpy as np
 import jax.numpy as jnp
 
 I32 = jnp.int32
+F32 = jnp.float32
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,6 +61,35 @@ class WorkloadSpec:
         )
 
 
+class DynWorkload(NamedTuple):
+    """Traceable (vmap-stackable) view of a WorkloadSpec.
+
+    All fields are jnp scalars except ``zcdf`` (the (R,) Zipf CDF table).
+    The workload *kind* and the key-space size R stay static — they pick
+    the compiled program; everything here only feeds it data.
+    """
+    txn_len: jnp.ndarray        # () i32 — ACTIVE ops per txn (<= padded L)
+    write_ratio: jnp.ndarray    # () f32
+    n_hot: jnp.ndarray          # () i32
+    n_warehouses: jnp.ndarray   # () i32
+    seed: jnp.ndarray           # () i32
+    reads_lock: jnp.ndarray     # () bool
+    zcdf: jnp.ndarray           # (R,) f32 Zipf CDF (always present)
+
+
+def dyn_workload(spec: WorkloadSpec) -> DynWorkload:
+    """Materialize the traceable view. Eager — call outside jit."""
+    return DynWorkload(
+        txn_len=jnp.asarray(spec.txn_len, I32),
+        write_ratio=jnp.asarray(spec.write_ratio, F32),
+        n_hot=jnp.asarray(spec.n_hot, I32),
+        n_warehouses=jnp.asarray(spec.n_warehouses, I32),
+        seed=jnp.asarray(spec.seed, I32),
+        reads_lock=jnp.asarray(spec.reads_lock, bool),
+        zcdf=zipf_cdf_table(spec.n_rows, spec.zipf_s),
+    )
+
+
 # ---------------------------------------------------------------------------
 # integer hashing (splitmix32-style) — cheap, deterministic, vectorizable
 # ---------------------------------------------------------------------------
@@ -64,9 +103,9 @@ def _hash_u32(x: jnp.ndarray) -> jnp.ndarray:
     return x
 
 
-def _hash3(a, b, c, salt: int) -> jnp.ndarray:
-    h = _hash_u32(a.astype(jnp.uint32) * jnp.uint32(0x9E3779B9)
-                  + jnp.uint32(salt))
+def _hash3(a, b, c, salt) -> jnp.ndarray:
+    salt = jnp.asarray(salt).astype(jnp.uint32)
+    h = _hash_u32(a.astype(jnp.uint32) * jnp.uint32(0x9E3779B9) + salt)
     h = _hash_u32(h ^ (b.astype(jnp.uint32) * jnp.uint32(0x85EBCA6B)))
     h = _hash_u32(h ^ (c.astype(jnp.uint32) * jnp.uint32(0xC2B2AE35)))
     return h
@@ -77,7 +116,7 @@ def _uniform01(h: jnp.ndarray) -> jnp.ndarray:
 
 
 def zipf_cdf(n: int, s: float) -> np.ndarray:
-    """CDF of a Zipf(s) distribution over keys [0, n)."""
+    """CDF of a Zipf(s) distribution over keys [0, n) (numpy, float64)."""
     ranks = np.arange(1, n + 1, dtype=np.float64)
     w = ranks ** (-float(s)) if s > 0 else np.ones_like(ranks)
     cdf = np.cumsum(w / w.sum())
@@ -85,15 +124,30 @@ def zipf_cdf(n: int, s: float) -> np.ndarray:
     return cdf.astype(np.float32)
 
 
+def zipf_cdf_table(n: int, s: float) -> jnp.ndarray:
+    """Engine-facing CDF table, (R,) f32 on device.
+
+    Deliberately routed through the single numpy implementation so every
+    consumer (per-config run, sweep lane, aria batch) sees bit-identical
+    tables regardless of batching.
+    """
+    return jnp.asarray(zipf_cdf(n, float(s)))
+
+
 # ---------------------------------------------------------------------------
 # transaction generation
 # ---------------------------------------------------------------------------
 
-def gen_txn(spec: WorkloadSpec, thread_ids: jnp.ndarray, txn_ctr: jnp.ndarray):
-    """Generate transaction programs for every thread.
+def gen_txn_dyn(kind: str, n_rows: int, L: int, dw: DynWorkload,
+                thread_ids: jnp.ndarray, txn_ctr: jnp.ndarray):
+    """Generate transaction programs for every thread (traceable params).
 
     Args:
-      spec: workload spec (static).
+      kind: workload kind (static — selects the program).
+      n_rows: key space R (static).
+      L: padded op-slot count (static shape). Slots >= ``dw.txn_len`` are
+         generated but never executed (``nops`` stops the engine first).
+      dw: traceable workload parameters.
       thread_ids: (T,) int32.
       txn_ctr: (T,) int32 per-thread transaction counter.
 
@@ -102,32 +156,29 @@ def gen_txn(spec: WorkloadSpec, thread_ids: jnp.ndarray, txn_ctr: jnp.ndarray):
       iswr:  (T, L) bool write flags.
       dup:   (T, L) bool — key already appears earlier in the same txn
              (re-entrant access: no new ticket needed).
-      nops:  (T,) int32 — ops in this txn (== L for all current kinds).
+      nops:  (T,) int32 — ops in this txn (== dw.txn_len).
     """
-    L = spec.txn_len
     T = thread_ids.shape[0]
     tid = thread_ids[:, None]
     ctr = txn_ctr[:, None]
     slot = jnp.arange(L, dtype=I32)[None, :]
 
     base = tid * I32(1_000_003) + ctr
-    hk = _hash3(base, slot, jnp.zeros_like(slot), spec.seed * 7 + 1)
-    hw = _hash3(base, slot, jnp.ones_like(slot), spec.seed * 7 + 2)
+    hk = _hash3(base, slot, jnp.zeros_like(slot), dw.seed * 7 + 1)
+    hw = _hash3(base, slot, jnp.ones_like(slot), dw.seed * 7 + 2)
     u_key = _uniform01(hk)
     u_wr = _uniform01(hw)
 
-    R = spec.n_rows
-    kind = spec.kind
+    R = n_rows
 
     def zipf_keys(u):
-        cdf = jnp.asarray(zipf_cdf(R, spec.zipf_s))
-        return jnp.searchsorted(cdf, u).astype(I32).clip(0, R - 1)
+        return jnp.searchsorted(dw.zcdf, u).astype(I32).clip(0, R - 1)
 
     def uniform_keys(u, lo=0, hi=None):
         hi = R if hi is None else hi
         return (lo + (u * (hi - lo)).astype(I32)).clip(lo, hi - 1)
 
-    wr = u_wr < spec.write_ratio
+    wr = u_wr < dw.write_ratio
 
     if kind == "hotspot_update":
         # op 0: THE hot row; others: uniform non-hot.
@@ -138,7 +189,7 @@ def gen_txn(spec: WorkloadSpec, thread_ids: jnp.ndarray, txn_ctr: jnp.ndarray):
         keys = zipf_keys(u_key)
         iswr = wr
     elif kind == "hotspot_scan":
-        keys = uniform_keys(u_key, lo=0, hi=max(spec.n_hot * 16, 2))
+        keys = uniform_keys(u_key, lo=0, hi=jnp.maximum(dw.n_hot * 16, 2))
         iswr = jnp.ones_like(wr)
     elif kind == "uniform":
         keys = uniform_keys(u_key)
@@ -148,12 +199,12 @@ def gen_txn(spec: WorkloadSpec, thread_ids: jnp.ndarray, txn_ctr: jnp.ndarray):
         iswr = jnp.ones_like(wr)
     elif kind == "fit":
         # op 0: hot account (zipf over n_hot); op 1: uniform insert; rest mix.
-        hot = uniform_keys(u_key, lo=0, hi=spec.n_hot)
-        rest = uniform_keys(u_key, lo=spec.n_hot)
+        hot = uniform_keys(u_key, lo=0, hi=dw.n_hot)
+        rest = uniform_keys(u_key, lo=dw.n_hot)
         keys = jnp.where(slot == 0, hot, rest)
         iswr = jnp.where(slot <= 1, True, wr)
     elif kind == "tpcc":
-        W = spec.n_warehouses
+        W = dw.n_warehouses
         wh = uniform_keys(u_key, lo=0, hi=W)
         dist = W + wh * 10 + uniform_keys(u_wr, lo=0, hi=10)
         rest = uniform_keys(u_key, lo=W * 11)
@@ -162,8 +213,7 @@ def gen_txn(spec: WorkloadSpec, thread_ids: jnp.ndarray, txn_ctr: jnp.ndarray):
     else:  # pragma: no cover
         raise ValueError(kind)
 
-    if spec.reads_lock:
-        iswr = jnp.ones_like(iswr)
+    iswr = iswr | dw.reads_lock
 
     # dup[i] = key i seen at an earlier slot (re-entrant lock).
     eq = keys[:, :, None] == keys[:, None, :]            # (T, L, L)
@@ -171,16 +221,34 @@ def gen_txn(spec: WorkloadSpec, thread_ids: jnp.ndarray, txn_ctr: jnp.ndarray):
     dup = jnp.any(eq & earlier & iswr[:, None, :], axis=2) & iswr
     # A read slot never takes a ticket; only writes matter for dup.
 
-    nops = jnp.full((T,), L, dtype=I32)
+    nops = jnp.broadcast_to(dw.txn_len, (T,)).astype(I32)
     return keys.astype(I32), iswr, dup, nops
+
+
+def gen_txn(spec: WorkloadSpec, thread_ids: jnp.ndarray, txn_ctr: jnp.ndarray):
+    """Static-spec convenience wrapper around :func:`gen_txn_dyn`."""
+    return gen_txn_dyn(spec.kind, spec.n_rows, spec.txn_len,
+                       dyn_workload(spec), thread_ids, txn_ctr)
+
+
+def will_abort_dyn(seed: jnp.ndarray, p_abort: jnp.ndarray,
+                   thread_ids: jnp.ndarray,
+                   txn_ctr: jnp.ndarray) -> jnp.ndarray:
+    """Deterministic per-transaction injected-abort decision (Fig. 10).
+
+    ``p_abort`` is a traced f32 scalar; 0 simply draws no aborts, so the
+    same compiled program covers every injection rate in a sweep.
+    """
+    h = _hash3(thread_ids * I32(1_000_003) + txn_ctr,
+               jnp.zeros_like(thread_ids), jnp.zeros_like(thread_ids),
+               seed * 7 + 5)
+    return _uniform01(h) < p_abort
 
 
 def will_abort(spec: WorkloadSpec, p_abort: float,
                thread_ids: jnp.ndarray, txn_ctr: jnp.ndarray) -> jnp.ndarray:
-    """Deterministic per-transaction injected-abort decision (Fig. 10)."""
+    """Static-spec convenience wrapper around :func:`will_abort_dyn`."""
     if p_abort <= 0.0:
         return jnp.zeros_like(thread_ids, dtype=bool)
-    h = _hash3(thread_ids * I32(1_000_003) + txn_ctr,
-               jnp.zeros_like(thread_ids), jnp.zeros_like(thread_ids),
-               spec.seed * 7 + 5)
-    return _uniform01(h) < p_abort
+    return will_abort_dyn(jnp.asarray(spec.seed, I32),
+                          jnp.asarray(p_abort, F32), thread_ids, txn_ctr)

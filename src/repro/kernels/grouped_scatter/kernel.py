@@ -24,6 +24,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams; accept both
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
 
 DEF_BG = 128      # group rows per block   (MXU lane dim)
 DEF_BD = 256      # feature columns per block
@@ -84,7 +88,7 @@ def segment_sums(seg_ids: jnp.ndarray, updates: jnp.ndarray,
         ],
         out_specs=pl.BlockSpec((bg, bd), lambda g, d, n: (g, d)),
         out_shape=jax.ShapeDtypeStruct((G, Dp), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(seg_ids[None, :], updates)

