@@ -47,15 +47,15 @@ def main() -> None:
 
     from . import (fig02_motivation, fig06_ablation, fig07_mix,
                    fig08_scalability, fig09_sync, fig10_abort_skew,
-                   fig12_tpcc, fig13_batch, fig14_recovery, kernel_bench,
-                   roofline_table)
+                   fig12_tpcc, fig13_batch, fig14_recovery, fig15_adaptive,
+                   kernel_bench, roofline_table)
     modules = {
         "fig02": fig02_motivation, "fig06": fig06_ablation,
         "fig07": fig07_mix, "fig08": fig08_scalability,
         "fig09": fig09_sync, "fig10": fig10_abort_skew,
         "fig12": fig12_tpcc, "fig13": fig13_batch,
-        "fig14": fig14_recovery, "kernels": kernel_bench,
-        "roofline": roofline_table,
+        "fig14": fig14_recovery, "fig15": fig15_adaptive,
+        "kernels": kernel_bench, "roofline": roofline_table,
     }
     if args.only:
         modules = {args.only: modules[args.only]}

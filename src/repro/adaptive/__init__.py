@@ -1,0 +1,29 @@
+"""Adaptive contention governor (DESIGN.md §7).
+
+Runs the lock engine in resumable time segments and re-decides the
+protocol preset between segments from observed telemetry — the control
+half of the paper's hotspot-aware switching, extended to non-stationary
+(drifting) workloads. Because every protocol flag, cost, and workload
+parameter is traced (PR 1), a governed run compiles once per shape
+bucket no matter how often it switches.
+
+Quickstart::
+
+    from repro.adaptive import GovernorCell, QueueRulePolicy, run_governed
+    from repro.core.lock import WorkloadSpec, skew_ramp
+    drift = skew_ramp(WorkloadSpec(kind="zipf", txn_len=4), 12)
+    res = run_governed(
+        [GovernorCell("adaptive", QueueRulePolicy(), drift, n_threads=64)],
+        horizon=240_000, n_segments=12)
+"""
+from .governor import (PRESETS, DEFAULT_ARMS, preset_params, preset_family,
+                       SegmentRecord, Policy, FixedPolicy, QueueRulePolicy,
+                       EpsilonGreedyPolicy)
+from .runner import GovernorCell, run_governed, preset_timeline
+
+__all__ = [
+    "PRESETS", "DEFAULT_ARMS", "preset_params", "preset_family",
+    "SegmentRecord", "Policy", "FixedPolicy", "QueueRulePolicy",
+    "EpsilonGreedyPolicy",
+    "GovernorCell", "run_governed", "preset_timeline",
+]

@@ -1,0 +1,212 @@
+"""Governed execution: (policy × drift-scenario) cells on the sweep substrate.
+
+A :class:`GovernorCell` pairs a :class:`~repro.adaptive.governor.Policy`
+with a :class:`~repro.core.lock.workload.DriftSchedule`. ``run_governed``
+executes every cell as a sequence of resumable engine segments
+(``engine.run_segment``): before each segment the cell's policy reads the
+telemetry history and picks a preset, the drift schedule supplies the
+segment's workload, and the engine is re-entered with the new traced
+scalars — the whole run compiles **once per shape bucket** no matter how
+often protocols or workloads switch (asserted in tests/test_adaptive.py).
+
+Cells sharing a compile key (kind, padded T, L, R) form one bucket. On a
+single small host lanes run sequentially through the shared
+``_run_seg_dyn`` executable (the measured-cheaper path, DESIGN.md §3.3);
+on multi-device hosts the bucket's lanes are stacked and stepped together
+under ``jax.vmap`` (``_run_seg_batch``), segment by segment — policies
+stay host-side Python between segments either way.
+
+Results come back as a plain :class:`~repro.sweep.runner.SweepResults`
+whose ``segments`` field carries the per-segment time series, so the JSON
+store (schema ``repro.sweep/v2``), ``summarize``, and the benchmark
+harness all work unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Iterable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lock import engine as _engine
+from repro.core.lock.costs import CostModel
+from repro.core.lock.engine import EngineConfig, I32
+from repro.core.lock.metrics import extract_globals, extract_segment
+from repro.core.lock.workload import DriftSchedule
+from repro.sweep.grid import SweepPoint
+from repro.sweep.runner import (BucketInfo, SweepResults, MIN_T_BUCKET,
+                                _auto_chunk, _pow2ceil, _stack, _take)
+
+from .governor import Policy, SegmentRecord, preset_params
+
+
+@dataclasses.dataclass(frozen=True)
+class GovernorCell:
+    """One governed run: a policy steering one drifting workload."""
+    name: str
+    policy: Policy
+    drift: DriftSchedule
+    n_threads: int
+    costs: CostModel = CostModel()
+    p_abort: float = 0.0
+
+    def label(self) -> str:
+        return self.policy.name
+
+
+def _cell_config(cell: GovernorCell, preset: str, seg: int,
+                 horizon: int) -> EngineConfig:
+    return EngineConfig(
+        protocol=preset_params(preset), costs=cell.costs,
+        workload=cell.drift.spec(seg), n_threads=cell.n_threads,
+        horizon=horizon, p_abort=cell.p_abort)
+
+
+def _seg_compiles() -> int:
+    return (_engine._run_seg_dyn._cache_size()
+            + _engine._run_seg_batch._cache_size())
+
+
+def run_governed(cells: Iterable[GovernorCell], *, horizon: int,
+                 n_segments: int, chunk_size: int | None = None,
+                 verbose: bool = False) -> SweepResults:
+    """Run every cell for ``n_segments`` governed segments over ``horizon``.
+
+    Segment boundaries are ``horizon * (k+1) // n_segments``; a busy cell
+    pauses at its first event past the boundary, a stalled one exactly at
+    it (``engine._make_step``), so a cell whose policy never switches and
+    whose drift is stationary is bit-identical to a single-shot
+    ``simulate()`` of the same config — segmentation is pause/resume,
+    not restart. ``chunk_size`` bounds how many lanes share one vmapped
+    program (1 = sequential single-lane executions); the default adapts
+    to the hardware like the sweep runner.
+    """
+    cells = list(cells)
+    names = [c.name for c in cells]
+    if len(set(names)) != len(names):
+        dup = sorted({n for n in names if names.count(n) > 1})
+        raise ValueError(f"duplicate governor cell names: {dup[:5]}")
+    for c in cells:
+        assert c.drift.n_segments >= 1
+    chunk_size = chunk_size or _auto_chunk()
+
+    # bucket by compile key, padding threads to the pow2 cap like the sweep
+    buckets: dict[tuple, list[int]] = {}
+    pads: dict[int, tuple[int, int]] = {}
+    for i, c in enumerate(cells):
+        w = c.drift.base
+        pad_t = _pow2ceil(c.n_threads, MIN_T_BUCKET)
+        pads[i] = (pad_t, w.txn_len)
+        buckets.setdefault((w.kind, w.n_rows, pad_t, w.txn_len),
+                           []).append(i)
+
+    metrics, wall_us, segments = {}, {}, {}
+    infos: list[BucketInfo] = []
+    compiles0 = _seg_compiles()
+    t_start = time.perf_counter()
+
+    for key, idxs in buckets.items():
+        kind, n_rows, pad_t, pad_l = key
+        bcells = [cells[i] for i in idxs]
+        G = len(bcells)
+        t_bucket = time.perf_counter()
+
+        for c in bcells:
+            c.policy.reset(c.n_threads)
+        history: list[list[SegmentRecord]] = [[] for _ in bcells]
+
+        # initial states + host-side Globals snapshots (all-zero counters)
+        stat = None
+        states, g_prev, preset0 = [], [], []
+        for c in bcells:
+            p0 = c.policy.decide(0, [])
+            preset0.append(p0)
+            st, dp0 = _engine.split_config(
+                _cell_config(c, p0, 0, horizon),
+                pad_threads=pad_t, pad_len=pad_l)
+            assert stat is None or st == stat
+            stat = st
+            s0 = _engine.init_state_dyn(st, dp0)
+            states.append(s0)
+            g_prev.append(jax.device_get(s0.g))
+
+        # lane groups: at most chunk_size cells share one vmapped program
+        # (groups of 1 run through the single-lane executable) — same
+        # width-bounding the sweep runner applies, here per segment
+        groups = [list(range(lo, min(lo + chunk_size, G)))
+                  for lo in range(0, G, max(chunk_size, 1))]
+        stacks: list = [None] * len(groups)
+        for gi, grp in enumerate(groups):
+            if len(grp) > 1:       # pad lanes to a stable pow2 width
+                gp = _pow2ceil(len(grp))
+                stacks[gi] = _stack([states[j] for j in grp]
+                                    + [states[grp[-1]]] * (gp - len(grp)))
+
+        for k in range(n_segments):
+            until = horizon * (k + 1) // n_segments
+            presets = ([c.policy.decide(k, h)
+                        for c, h in zip(bcells, history)]
+                       if k else preset0)
+            dps = [_engine.split_config(
+                _cell_config(c, p, k, horizon),
+                pad_threads=pad_t, pad_len=pad_l)[1]
+                for c, p in zip(bcells, presets)]
+            outs: list = [None] * G
+            for gi, grp in enumerate(groups):
+                if len(grp) > 1:
+                    gp = _pow2ceil(len(grp))
+                    dp_stack = _stack([dps[j] for j in grp]
+                                      + [dps[grp[-1]]] * (gp - len(grp)))
+                    untils = jnp.full((gp,), until, I32)
+                    stacks[gi], snaps = _engine._run_seg_batch(
+                        stat, dp_stack, stacks[gi], untils)
+                    jax.block_until_ready(stacks[gi].g.now)
+                    g_host = jax.device_get(stacks[gi].g)
+                    snap_host = jax.device_get(snaps)
+                    for lane, j in enumerate(grp):
+                        outs[j] = (_take(g_host, lane),
+                                   _take(snap_host, lane))
+                else:
+                    j = grp[0]
+                    s, snap = _engine._run_seg_dyn(
+                        stat, dps[j], states[j], jnp.asarray(until, I32))
+                    states[j] = s
+                    outs[j] = (jax.device_get(s.g), jax.device_get(snap))
+            for j, (c, p) in enumerate(zip(bcells, presets)):
+                g_now, snap = outs[j]
+                r = extract_segment(p, c.n_threads, g_prev[j], g_now)
+                history[j].append(SegmentRecord(
+                    index=k, t0=int(g_prev[j].now), t1=int(g_now.now),
+                    preset=p, metrics=r, max_qlen=int(snap.max_qlen),
+                    n_hot=int(snap.n_hot), n_live=int(snap.n_live),
+                    n_waiting=int(snap.n_waiting)))
+                g_prev[j] = g_now
+
+        wall_b = time.perf_counter() - t_bucket
+        for j, c in enumerate(bcells):
+            metrics[c.name] = extract_globals(c.label(), c.n_threads,
+                                              g_prev[j])
+            wall_us[c.name] = wall_b * 1e6 / G
+            segments[c.name] = [r.as_json() for r in history[j]]
+        infos.append(BucketInfo(
+            family="governed", kind=kind, n_rows=n_rows, pad_threads=pad_t,
+            pad_len=pad_l, n_points=G, n_chunks=len(groups), wall_s=wall_b))
+        if verbose:
+            print(f"# governed bucket {kind}/R{n_rows}: {G} cell(s), "
+                  f"T<={pad_t}, {n_segments} segment(s), {wall_b:.1f}s")
+
+    points = [SweepPoint(
+        protocol=c.label(), workload=c.drift.base, n_threads=c.n_threads,
+        horizon=horizon, p_abort=c.p_abort, costs=c.costs,
+        name=c.name, tag=c.drift.name) for c in cells]
+    return SweepResults(
+        points=points, metrics=metrics, wall_us=wall_us, buckets=infos,
+        n_compiles=_seg_compiles() - compiles0,
+        wall_s=time.perf_counter() - t_start, segments=segments)
+
+
+def preset_timeline(res: SweepResults, name: str) -> list[str]:
+    """The per-segment preset sequence a cell's policy chose."""
+    return [seg["preset"] for seg in res.segments[name]]

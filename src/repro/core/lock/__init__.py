@@ -1,20 +1,26 @@
 """Concurrency-control engine: the paper's faithful reproduction layer."""
 from .costs import CostModel, ProtocolParams, protocol_params, PROTOCOLS
 from .workload import (WorkloadSpec, DynWorkload, dyn_workload, zipf_cdf,
-                       zipf_cdf_table)
+                       zipf_cdf_table, DriftSchedule, DRIFT_KINDS,
+                       stationary, hot_migration, skew_ramp, flash_crowd)
 from .engine import (EngineConfig, StaticShape, DynParams, split_config,
-                     SimState, init_state, init_state_dyn, run_sim, simulate,
+                     SimState, SegSnapshot, init_state, init_state_dyn,
+                     run_sim, run_segment, simulate,
                      START, WAIT, EXEC, CWAIT, COMMIT, RBACK, RBWAIT,
                      BACKOFF, ARRIVE, HALT)
-from .metrics import SimResult, extract, CSV_HEADER, TICKS_PER_SEC
+from .metrics import (SimResult, extract, extract_segment, delta_globals,
+                      CSV_HEADER, TICKS_PER_SEC)
 from .aria import simulate_aria, extract_aria
 
 __all__ = [
     "CostModel", "ProtocolParams", "protocol_params", "PROTOCOLS",
     "WorkloadSpec", "DynWorkload", "dyn_workload", "zipf_cdf",
-    "zipf_cdf_table",
+    "zipf_cdf_table", "DriftSchedule", "DRIFT_KINDS", "stationary",
+    "hot_migration", "skew_ramp", "flash_crowd",
     "EngineConfig", "StaticShape", "DynParams", "split_config",
-    "SimState", "init_state", "init_state_dyn", "run_sim", "simulate",
-    "SimResult", "extract", "CSV_HEADER", "TICKS_PER_SEC",
+    "SimState", "SegSnapshot", "init_state", "init_state_dyn", "run_sim",
+    "run_segment", "simulate",
+    "SimResult", "extract", "extract_segment", "delta_globals",
+    "CSV_HEADER", "TICKS_PER_SEC",
     "simulate_aria", "extract_aria",
 ]

@@ -310,16 +310,36 @@ def _derive(stat: StaticShape, dp: DynParams, th: Threads,
 # engine step
 # ---------------------------------------------------------------------------
 
-def _make_step(stat: StaticShape, dp: DynParams):
+def _make_step(stat: StaticShape, dp: DynParams, until=None):
     """Build the tick-step function. ``stat`` is static (shapes + kind);
     every parameter in ``dp`` is traced, so protocol branches are computed
     unconditionally and masked — the price of one program for all configs.
+
+    ``until`` (traced, segmented mode) caps the *idle* time advance at
+    the segment boundary: when no thread is paying work (a pure wait
+    window — e.g. a detection-free deadlock whose only pending event is
+    a distant timeout) the jump stops at ``until`` instead of skipping
+    past it, so a governor can resolve the stall by switching protocol.
+    Busy steps are NEVER split: real events may overshoot the boundary
+    by one completion, which keeps the step sequence of a segmented run
+    literally identical to the single-shot run — several engine rules
+    advance per loop iteration (the group-commit queue drains one
+    member per derive), so injecting partial iterations into busy
+    execution would change event timing. Extra iterations occur only
+    inside all-waiting windows, where every stage is a state no-op
+    (grantability, aborts, and hotspot transitions are pure functions
+    of the frozen state and were already applied at the window's
+    opening event; timeouts fire on ``now`` crossings that the idle
+    jump never passes) — so only the diagnostic ``Globals.iters`` can
+    differ, and only across stall windows split by boundaries.
     """
     T = stat.n_threads
     R = stat.n_rows
     L = stat.txn_len
     tids = jnp.arange(T, dtype=I32)
     stop_time = _stop_time(dp)
+    idle_stop = stop_time if until is None else jnp.minimum(stop_time,
+                                                            until)
 
     def cur(field_tl, oph):
         """Gather per-thread value at its current op slot (clipped)."""
@@ -549,7 +569,10 @@ def _make_step(stat: StaticShape, dp: DynParams):
         texp = jnp.minimum(texp, jnp.maximum(rb_exp, 1))
         dt = jnp.minimum(dt_pay, jnp.maximum(texp, 1))
         dt = jnp.where(starting.any(), 0, dt)       # starts are instant
-        dt = jnp.clip(dt, 0, jnp.maximum(stop_time - now, 1))
+        # idle windows (nothing paying) stop at the segment boundary;
+        # busy steps keep single-shot event timing (see docstring above)
+        cap = jnp.where(dt_pay == INF, idle_stop, stop_time)
+        dt = jnp.clip(dt, 0, jnp.maximum(cap - now, 1))
         now = now + dt
         work = jnp.where(paying, th.work - dt, th.work)
         th = th._replace(work=work)
@@ -797,11 +820,22 @@ def init_state(cfg: EngineConfig) -> SimState:
     return init_state_dyn(*split_config(cfg))
 
 
-def _run_core(stat: StaticShape, dp: DynParams, s0: SimState) -> SimState:
+def _run_core(stat: StaticShape, dp: DynParams, s0: SimState,
+              until: jnp.ndarray | None = None) -> SimState:
     """The loop itself — shared verbatim by the jitted single-config entry
-    point and the vmapped sweep entry point (bitwise parity depends on it).
+    point, the vmapped sweep entry point, and the segmented entry points
+    (bitwise parity depends on it).
+
+    ``until`` (traced, optional) pauses the loop at the segment boundary:
+    it bounds the loop condition AND caps *idle* jumps (see
+    :func:`_make_step`), so a stalled system pauses exactly at ``until``
+    while a busy one pauses at its first event past it. Busy steps are
+    never split, so a segmented run replays the single-shot step
+    sequence literally — state and metrics are bit-identical, and even
+    ``Globals.iters`` only differs when a fully-idle stall window spans
+    boundaries (the jump splits into one iteration per segment).
     """
-    step = _make_step(stat, dp)
+    step = _make_step(stat, dp, until=until)
     stop_time = _stop_time(dp)
 
     def cond(s: SimState):
@@ -809,6 +843,8 @@ def _run_core(stat: StaticShape, dp: DynParams, s0: SimState) -> SimState:
         running = jnp.where(dp.drain,
                             live & (s.g.now < stop_time),
                             s.g.now < dp.horizon)
+        if until is not None:
+            running = running & (s.g.now < until)
         return running & (s.g.iters < dp.max_iters)
 
     return lax.while_loop(cond, step, s0)
@@ -828,6 +864,74 @@ def _run_batch(stat: StaticShape, dps: DynParams, s0s: SimState) -> SimState:
     bit-identical to running it alone at the same (padded) shape.
     """
     return jax.vmap(lambda dp, s0: _run_core(stat, dp, s0))(dps, s0s)
+
+
+class SegSnapshot(NamedTuple):
+    """Instantaneous contention telemetry at a segment boundary.
+
+    Counter-style telemetry (throughput, aborts, latency, utilization)
+    comes from differencing ``Globals`` across the boundary instead
+    (:func:`repro.core.lock.metrics.delta_globals`); these are the
+    *state* observables a governor cannot recover from counters.
+    """
+    max_qlen: jnp.ndarray   # () i32  longest row wait queue
+    n_hot: jnp.ndarray      # () i32  rows currently promoted hot
+    n_live: jnp.ndarray     # () i32  live tickets across all rows
+    n_waiting: jnp.ndarray  # () i32  threads in a lock/commit wait phase
+
+
+def _snapshot(stat: StaticShape, dp: DynParams, s: SimState) -> SegSnapshot:
+    d = _derive(stat, dp, s.th, s.rows)
+    waitish = ((s.th.phase == WAIT) | (s.th.phase == CWAIT)
+               | (s.th.phase == RBWAIT))
+    return SegSnapshot(
+        max_qlen=d.n_wait.max().astype(I32),
+        n_hot=s.rows.hot.sum().astype(I32),
+        n_live=d.n_live.sum().astype(I32),
+        n_waiting=waitish.sum().astype(I32))
+
+
+def _run_seg_core(stat: StaticShape, dp: DynParams, s0: SimState,
+                  until: jnp.ndarray) -> tuple[SimState, SegSnapshot]:
+    s = _run_core(stat, dp, s0, until=until)
+    return s, _snapshot(stat, dp, s)
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def _run_seg_dyn(stat: StaticShape, dp: DynParams, s0: SimState,
+                 until: jnp.ndarray) -> tuple[SimState, SegSnapshot]:
+    return _run_seg_core(stat, dp, s0, until)
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def _run_seg_batch(stat: StaticShape, dps: DynParams, s0s: SimState,
+                   untils: jnp.ndarray) -> tuple[SimState, SegSnapshot]:
+    """Segmented analogue of :func:`_run_batch`: G lanes, one program.
+
+    Every argument including ``untils`` is traced, so a governor can
+    re-decide any lane's protocol, workload, or boundary between segments
+    and re-enter the *same* executable — zero recompiles per shape bucket.
+    """
+    return jax.vmap(
+        lambda dp, s0, u: _run_seg_core(stat, dp, s0, u))(dps, s0s, untils)
+
+
+def run_segment(stat: StaticShape, dp: DynParams, state: SimState,
+                until) -> tuple[SimState, SegSnapshot]:
+    """Advance ``state`` until sim-time reaches ``until`` (or the run ends).
+
+    Returns the resumable state plus an end-of-segment telemetry snapshot.
+    A run split into N segments with unchanged ``dp`` is bit-identical to
+    the single-shot :func:`run_sim`/``simulate`` result in every state
+    leaf and metric — the boundary pauses the ``while_loop`` between
+    events (busy systems stop at their first event past ``until``, fully
+    stalled ones exactly at it); it never moves or splits an event. The
+    diagnostic ``Globals.iters`` can differ only when a stall window
+    spans boundaries. Changing ``dp`` (protocol preset, costs, workload)
+    between segments is free: everything in it is traced, so the
+    compiled program is reused.
+    """
+    return _run_seg_dyn(stat, dp, state, jnp.asarray(until, I32))
 
 
 def run_sim(cfg: EngineConfig) -> SimState:

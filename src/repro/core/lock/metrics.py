@@ -1,4 +1,16 @@
-"""Result extraction for CC-engine simulations."""
+"""Result extraction for CC-engine simulations.
+
+Two modes:
+
+* whole-run: :func:`extract` / :func:`extract_globals` on a final state.
+* per-segment (delta): every metric in ``Globals`` is a monotone counter
+  (or a histogram of counters), so the metrics of any time window are the
+  elementwise difference of its boundary snapshots — :func:`delta_globals`
+  builds that difference as a synthetic ``Globals`` whose ``now`` is the
+  window length, and :func:`extract_segment` feeds it through the same
+  extraction path, keeping whole-run and per-segment numbers structurally
+  identical (a 1-segment window reproduces the whole-run result exactly).
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -79,6 +91,23 @@ def extract_globals(protocol: str, n_threads: int, g) -> SimResult:
         abort_rate=aborts / max(commits + aborts, 1),
         iters=int(g.iters),
     )
+
+
+def delta_globals(g0, g1):
+    """Counter delta across a segment ``[g0, g1]`` as a synthetic Globals.
+
+    Every field of ``Globals`` is a monotone counter over the run, so the
+    segment's contribution is ``g1 - g0`` fieldwise; ``now`` becomes the
+    window length, which makes the result directly consumable by
+    :func:`extract_globals` (tps/cpu_util divide by the window). Works on
+    device arrays and on host (numpy) snapshots alike.
+    """
+    return type(g1)(*(b - a for a, b in zip(g0, g1)))
+
+
+def extract_segment(protocol: str, n_threads: int, g0, g1) -> SimResult:
+    """Per-segment metrics from boundary Globals snapshots (see above)."""
+    return extract_globals(protocol, n_threads, delta_globals(g0, g1))
 
 
 CSV_HEADER = ("protocol,threads,tps,mean_lat_us,p95_lat_us,abort_rate,"

@@ -52,6 +52,7 @@ class WorkloadSpec:
     n_warehouses: int = 1       # tpcc
     seed: int = 0
     reads_lock: bool = False    # SER current reads (locks for reads)
+    hot_base: int = 0           # hot-set anchor key (drift: migration)
 
     def __post_init__(self):
         assert self.txn_len >= 1
@@ -74,6 +75,7 @@ class DynWorkload(NamedTuple):
     n_warehouses: jnp.ndarray   # () i32
     seed: jnp.ndarray           # () i32
     reads_lock: jnp.ndarray     # () bool
+    hot_base: jnp.ndarray       # () i32 hot-set anchor (0 = classic layout)
     zcdf: jnp.ndarray           # (R,) f32 Zipf CDF (always present)
 
 
@@ -86,6 +88,7 @@ def dyn_workload(spec: WorkloadSpec) -> DynWorkload:
         n_warehouses=jnp.asarray(spec.n_warehouses, I32),
         seed=jnp.asarray(spec.seed, I32),
         reads_lock=jnp.asarray(spec.reads_lock, bool),
+        hot_base=jnp.asarray(spec.hot_base, I32),
         zcdf=zipf_cdf_table(spec.n_rows, spec.zipf_s),
     )
 
@@ -180,26 +183,38 @@ def gen_txn_dyn(kind: str, n_rows: int, L: int, dw: DynWorkload,
 
     wr = u_wr < dw.write_ratio
 
+    # Hot-set migration (drift schedules): ``hot_base`` relocates the hot
+    # keys. Every use below is the identity at hot_base=0, so classic
+    # (non-drifting) workloads are bit-for-bit unchanged.
+    hb = dw.hot_base % I32(R)
+
     if kind == "hotspot_update":
-        # op 0: THE hot row; others: uniform non-hot.
+        # op 0: THE hot row (hot_base); others: uniform non-hot. The rest
+        # keys dodge the hot key by swapping it with key 0 (the hot home).
         k_rest = uniform_keys(u_key, lo=1)
-        keys = jnp.where(slot == 0, I32(0), k_rest)
+        k_rest = jnp.where(k_rest == hb, I32(0), k_rest)
+        keys = jnp.where(slot == 0, hb, k_rest)
         iswr = jnp.where(slot == 0, True, wr)
     elif kind == "hotspot_mix":
-        keys = zipf_keys(u_key)
+        # zipf ranks rotate by hot_base: rank 0 (the hottest key) sits AT
+        # hot_base, so migration moves the whole skew profile.
+        keys = (zipf_keys(u_key) + hb) % I32(R)
         iswr = wr
     elif kind == "hotspot_scan":
-        keys = uniform_keys(u_key, lo=0, hi=jnp.maximum(dw.n_hot * 16, 2))
+        keys = (uniform_keys(u_key, lo=0, hi=jnp.maximum(dw.n_hot * 16, 2))
+                + hb) % I32(R)
         iswr = jnp.ones_like(wr)
     elif kind == "uniform":
         keys = uniform_keys(u_key)
         iswr = wr
     elif kind == "zipf":
-        keys = zipf_keys(u_key)
+        keys = (zipf_keys(u_key) + hb) % I32(R)
         iswr = jnp.ones_like(wr)
     elif kind == "fit":
-        # op 0: hot account (zipf over n_hot); op 1: uniform insert; rest mix.
-        hot = uniform_keys(u_key, lo=0, hi=dw.n_hot)
+        # op 0: hot account (zipf over n_hot at hot_base); op 1: uniform
+        # insert; rest mix. A migrated hot set may overlap the insert
+        # range — that's the drift scenario's point (hot meets non-hot).
+        hot = (uniform_keys(u_key, lo=0, hi=dw.n_hot) + hb) % I32(R)
         rest = uniform_keys(u_key, lo=dw.n_hot)
         keys = jnp.where(slot == 0, hot, rest)
         iswr = jnp.where(slot <= 1, True, wr)
@@ -252,3 +267,85 @@ def will_abort(spec: WorkloadSpec, p_abort: float,
         return jnp.zeros_like(thread_ids, dtype=bool)
     return will_abort_dyn(jnp.asarray(spec.seed, I32),
                           jnp.asarray(p_abort, F32), thread_ids, txn_ctr)
+
+
+# ---------------------------------------------------------------------------
+# drift schedules (non-stationary workloads)
+# ---------------------------------------------------------------------------
+# A drift schedule is a per-segment sequence of WorkloadSpecs sharing one
+# compile key (same kind / n_rows / txn_len): only DynWorkload VALUES change
+# segment-to-segment, so the segmented engine replays the same executable
+# under every drift — the property the adaptive governor builds on.
+
+@dataclasses.dataclass(frozen=True)
+class DriftSchedule:
+    """A named per-segment workload sequence with a stable compile key."""
+    name: str
+    specs: tuple          # one WorkloadSpec per segment
+
+    def __post_init__(self):
+        assert self.specs, "empty drift schedule"
+        k0 = (self.specs[0].kind, self.specs[0].n_rows, self.specs[0].txn_len)
+        for s in self.specs:
+            assert (s.kind, s.n_rows, s.txn_len) == k0, (
+                "drift must keep the compile key (kind, n_rows, txn_len) "
+                f"stable: {k0} vs {(s.kind, s.n_rows, s.txn_len)}")
+
+    @property
+    def n_segments(self) -> int:
+        return len(self.specs)
+
+    def spec(self, k: int) -> WorkloadSpec:
+        """Workload for segment k (clamped — schedules are extendable)."""
+        return self.specs[min(k, len(self.specs) - 1)]
+
+    @property
+    def base(self) -> WorkloadSpec:
+        return self.specs[0]
+
+
+def stationary(base: WorkloadSpec, n_segments: int,
+               name: str = "stationary") -> DriftSchedule:
+    """No drift — the control schedule."""
+    return DriftSchedule(name, (base,) * n_segments)
+
+
+def hot_migration(base: WorkloadSpec, n_segments: int, *, n_sites: int = 4,
+                  period: int = 2) -> DriftSchedule:
+    """The hot set jumps between ``n_sites`` evenly spaced anchor keys
+    every ``period`` segments (shifting-hotspot regime, Guo et al.)."""
+    stride = max(base.n_rows // max(n_sites, 1), 1)
+    specs = tuple(
+        dataclasses.replace(
+            base, hot_base=((k // max(period, 1)) % n_sites) * stride)
+        for k in range(n_segments))
+    return DriftSchedule("hot_migration", specs)
+
+
+def skew_ramp(base: WorkloadSpec, n_segments: int, *, lo: float = 0.3,
+              hi: float = 1.0) -> DriftSchedule:
+    """Access skew ramps linearly lo -> hi over the run (Zipf s drift)."""
+    den = max(n_segments - 1, 1)
+    specs = tuple(
+        dataclasses.replace(base, zipf_s=lo + (hi - lo) * k / den)
+        for k in range(n_segments))
+    return DriftSchedule("skew_ramp", specs)
+
+
+def flash_crowd(base: WorkloadSpec, n_segments: int, *, at: float = 0.5,
+                write_lo: float = 0.15, write_hi: float = 1.0,
+                skew_hi: float | None = None) -> DriftSchedule:
+    """Write-ratio step at fraction ``at`` of the run (a flash crowd of
+    writers arrives); optionally the skew concentrates at the same time."""
+    step = int(round(at * n_segments))
+    specs = []
+    for k in range(n_segments):
+        crowd = k >= step
+        repl = {"write_ratio": write_hi if crowd else write_lo}
+        if skew_hi is not None and crowd:
+            repl["zipf_s"] = skew_hi
+        specs.append(dataclasses.replace(base, **repl))
+    return DriftSchedule("flash_crowd", tuple(specs))
+
+
+DRIFT_KINDS = ("stationary", "hot_migration", "skew_ramp", "flash_crowd")

@@ -113,13 +113,20 @@ class BucketInfo:
 
 @dataclasses.dataclass
 class SweepResults:
-    """Ordered results of one sweep run."""
+    """Ordered results of one sweep run.
+
+    ``segments`` is the optional per-point time series (one JSON-ready
+    record per engine segment) that governed runs (``repro.adaptive``)
+    attach; plain sweeps leave it empty. The store writes it under the
+    ``repro.sweep/v2`` schema.
+    """
     points: list[SweepPoint]
     metrics: dict[str, SimResult]       # name -> extracted metrics
     wall_us: dict[str, float]           # name -> amortized wall per point
     buckets: list[BucketInfo]
     n_compiles: int
     wall_s: float
+    segments: dict[str, list] = dataclasses.field(default_factory=dict)
 
     def __getitem__(self, name: str) -> SimResult:
         return self.metrics[name]

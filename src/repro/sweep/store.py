@@ -5,6 +5,13 @@ accounting, and one record per point (full config + extracted metrics).
 Records are plain dicts built from the dataclasses, so downstream tooling
 (benchmark trackers, plotting, PR-over-PR perf trajectories) needs no
 repro imports to read them.
+
+Schema ``repro.sweep/v2`` adds an optional per-point ``segments`` array —
+the governed-run time series (one record per engine segment: window
+tps/aborts, the preset the governor chose, end-of-segment contention
+state). Points without a time series simply omit the key, so v2 documents
+of plain sweeps are byte-compatible with v1 ones apart from the schema
+tag, and :func:`load_results` reads both generations.
 """
 from __future__ import annotations
 
@@ -16,12 +23,15 @@ from typing import Any
 
 from .runner import SweepResults
 
+SCHEMA = "repro.sweep/v2"
+SCHEMAS_READABLE = ("repro.sweep/v1", "repro.sweep/v2")
+
 
 def point_record(res: SweepResults, name: str,
                  point=None) -> dict:
     p = point or next(pt for pt in res.points if pt.name == name)
     r = res.metrics[name]
-    return {
+    rec = {
         "name": name,
         "protocol": p.protocol,
         "workload": dataclasses.asdict(p.workload),
@@ -34,11 +44,15 @@ def point_record(res: SweepResults, name: str,
         "wall_us": res.wall_us[name],
         "metrics": dataclasses.asdict(r),
     }
+    segs = res.segments.get(name)
+    if segs:
+        rec["segments"] = segs
+    return rec
 
 
 def results_doc(res: SweepResults, meta: dict | None = None) -> dict:
     return {
-        "schema": "repro.sweep/v1",
+        "schema": SCHEMA,
         "created_unix": time.time(),
         "meta": meta or {},
         "n_points": len(res.points),
@@ -66,6 +80,7 @@ def save_results(path: str, res: SweepResults,
 def load_results(path: str) -> dict:
     with open(path) as f:
         doc = json.load(f)
-    if doc.get("schema") != "repro.sweep/v1":
-        raise ValueError(f"{path}: not a repro.sweep/v1 results file")
+    if doc.get("schema") not in SCHEMAS_READABLE:
+        raise ValueError(f"{path}: not a repro.sweep results file "
+                         f"(schema {doc.get('schema')!r})")
     return doc

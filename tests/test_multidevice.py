@@ -1,6 +1,14 @@
-"""Multi-device integration via subprocess (8 forced host devices):
-actually EXECUTES a sharded train step (FSDP+TP+SP) and a sharded decode
-step on a 4x2 mesh — the same code paths the 512-device dry-run lowers."""
+"""Multi-device integration via subprocess (forced host devices): actually
+EXECUTES a sharded train step (FSDP+TP+SP) and a sharded decode step on a
+data x model mesh — the same code paths the 512-device dry-run lowers.
+
+Default is a smoke-size run (2x2 mesh, one train step) so tier-1 stays
+fast on small hosts; set ``REPRO_MULTIDEVICE_FULL=1`` for the original
+4x2/8-device two-step version. The subprocesses pin ``JAX_PLATFORMS=cpu``
+(forced host devices live on the CPU backend anyway): letting jax probe
+for accelerator plugins cost ~8 min of backend-discovery timeouts *per
+subprocess* on this image — that, not the compute, was the historical
+">9 min on a 2-core host"."""
 import os
 import subprocess
 import sys
@@ -9,11 +17,14 @@ import pytest
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
+FULL = os.environ.get("REPRO_MULTIDEVICE_FULL") == "1"
+N_DEV, MESH, N_STEPS = (8, "(4, 2)", 2) if FULL else (4, "(2, 2)", 1)
+
 
 def run_sub(code: str, timeout=600):
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC
-    env.pop("JAX_PLATFORMS", None)
+    env["JAX_PLATFORMS"] = "cpu"
     out = subprocess.run([sys.executable, "-c", code], env=env,
                          capture_output=True, text=True, timeout=timeout)
     assert out.returncode == 0, (out.stdout[-1000:], out.stderr[-3000:])
@@ -22,7 +33,8 @@ def run_sub(code: str, timeout=600):
 
 HEADER = (
     "import os;"
-    "os.environ['XLA_FLAGS']='--xla_force_host_platform_device_count=8';"
+    f"os.environ['XLA_FLAGS']="
+    f"'--xla_force_host_platform_device_count={N_DEV}';"
     "import jax, jax.numpy as jnp, numpy as np, dataclasses;"
     "from repro.configs import get_config;"
     "from repro.models import lm_spec, init_params;"
@@ -30,7 +42,7 @@ HEADER = (
     "from repro.distributed import param_shardings, batch_shardings;"
     "from repro.distributed.sharding import set_activation_mesh;"
     "from repro.launch.steps import make_train_step;"
-    "mesh = jax.make_mesh((4, 2), ('data', 'model'));"
+    f"mesh = jax.make_mesh({MESH}, ('data', 'model'));"
 )
 
 
@@ -48,7 +60,7 @@ def test_sharded_train_step_executes():
         "  batch = {'tokens': jnp.zeros((8, 64), jnp.int32),"
         " 'labels': jnp.ones((8, 64), jnp.int32)};\n"
         "  step = jax.jit(make_train_step(cfg, adamw.AdamWConfig()));\n"
-        "  for _ in range(2):\n"
+        f"  for _ in range({N_STEPS}):\n"
         "    params, opt, m = step(params, opt, batch);\n"
         "  assert np.isfinite(float(m['loss'])), m;\n"
         "  print('ok', float(m['loss']))\n"
