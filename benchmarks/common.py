@@ -34,9 +34,34 @@ def cc_point(proto, workload, threads, horizon, costs=None, name=None,
     return bench_row(name or f"{proto}_T{threads}", wall_us, r), r
 
 
+# Per-module sweep accounting: every sweep_rows() call appends a stats
+# record here; benchmarks/run.py pops them into the module's JSON entry so
+# the perf trajectory (BENCH_run.json) tracks compiles, wall, and the
+# compaction scheduler's repack counts across PRs.
+_SWEEP_STATS: list[dict] = []
+
+
+def sweep_stats(res) -> dict:
+    return {
+        "n_points": len(res.points),
+        "n_compiles": res.n_compiles,
+        "wall_s": res.wall_s,
+        "lane_iters": res.lane_iters,
+        "n_repacks": res.n_repacks,
+        "n_calls": sum(b.n_chunks for b in res.buckets),
+        "compacted": any(b.compacted for b in res.buckets),
+    }
+
+
+def pop_sweep_stats() -> list[dict]:
+    out, _SWEEP_STATS[:] = list(_SWEEP_STATS), []
+    return out
+
+
 def sweep_rows(points, names=None, **sweep_kw):
     """Run a grid through the sweep subsystem -> (csv_rows, SweepResults)."""
     res = run_sweep(points, **sweep_kw)
+    _SWEEP_STATS.append(sweep_stats(res))
     return summarize(res, names), res
 
 

@@ -1,0 +1,49 @@
+"""Compaction benchmark: mixed-density grid, sort-then-cut vs compacted.
+
+The grid pairs the protocols that churn on contended multi-row zipf
+(mysql/o1 keep committing via deadlock detection) with the ones that
+deadlock-stall without detection (o2/group at T>=16 sit idle at tens of
+iterations) — a density mix the analytic iteration estimate cannot see,
+so the PR-1 sort-then-cut chunking locksteps 10k-iteration lanes with
+near-idle ones. Rows report wall and the modeled vmapped cost
+(``lane_iters`` = width x slowest-lane iterations summed over device
+calls) for both paths at the same forced vmap width; the acceptance bar
+is compaction cutting lane_iters >= 2x (asserted in tests; measured
+here for BENCH_run.json).
+"""
+from .common import emit, sweep_rows
+from repro.core.lock import WorkloadSpec
+from repro.sweep import point
+
+ZIPF = WorkloadSpec(kind="zipf", txn_len=2, n_rows=512, zipf_s=0.9)
+CHUNK = 8
+
+
+def _grid(horizon):
+    """One full chunk whose composition sort-then-cut CANNOT fix: two
+    churning lanes and six stalled ones share the pack (there is only one
+    chunk to cut), so the chunked path pays 8 x the churning lanes'
+    iterations while compaction retires the stalled lanes on call 1."""
+    mk = lambda pr, t: point(pr, ZIPF, t, horizon=horizon,
+                             name=f"cmp_{pr}_T{t}")
+    return [mk("o1", 16), mk("mysql", 16),
+            mk("o2", 16), mk("o2", 32), mk("o2", 64),
+            mk("group", 16), mk("group", 32), mk("group", 64)]
+
+
+def run(quick=True):
+    horizon = 100_000 if quick else 400_000
+    rows = []
+    for tag, compact in (("off", False), ("on", True)):
+        _, res = sweep_rows(_grid(horizon), chunk_size=CHUNK,
+                            compact=compact)
+        rows.append(
+            f"compaction_{tag},{res.wall_s * 1e6 / len(res.points):.0f},"
+            f"lane_iters={res.lane_iters};n_repacks={res.n_repacks};"
+            f"n_calls={sum(b.n_chunks for b in res.buckets)};"
+            f"n_compiles={res.n_compiles};wall_s={res.wall_s:.3f}")
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -2,8 +2,10 @@
 
 Prints ``name,us_per_call,derived`` CSV. ``--full`` widens sweeps;
 ``--only fig08`` runs one module; ``--json PATH`` additionally writes the
-parsed rows + per-module wall times as machine-readable JSON (e.g.
-``BENCH_run.json``) so the perf trajectory is tracked across PRs.
+parsed rows, per-module wall times, and per-module sweep accounting
+(compiles, vmapped lane-iterations, compaction repack counts) as
+machine-readable JSON so the perf trajectory is tracked across PRs —
+the committed ``BENCH_run.json`` is the current quick-mode baseline.
 """
 import argparse
 import json
@@ -45,16 +47,17 @@ def main() -> None:
     args, _ = ap.parse_known_args()
     quick = not args.full
 
-    from . import (fig02_motivation, fig06_ablation, fig07_mix,
-                   fig08_scalability, fig09_sync, fig10_abort_skew,
-                   fig12_tpcc, fig13_batch, fig14_recovery, fig15_adaptive,
-                   kernel_bench, roofline_table)
+    from . import (common, compaction_bench, fig02_motivation,
+                   fig06_ablation, fig07_mix, fig08_scalability, fig09_sync,
+                   fig10_abort_skew, fig12_tpcc, fig13_batch, fig14_recovery,
+                   fig15_adaptive, kernel_bench, roofline_table)
     modules = {
         "fig02": fig02_motivation, "fig06": fig06_ablation,
         "fig07": fig07_mix, "fig08": fig08_scalability,
         "fig09": fig09_sync, "fig10": fig10_abort_skew,
         "fig12": fig12_tpcc, "fig13": fig13_batch,
         "fig14": fig14_recovery, "fig15": fig15_adaptive,
+        "compaction": compaction_bench,
         "kernels": kernel_bench, "roofline": roofline_table,
     }
     if args.only:
@@ -71,16 +74,25 @@ def main() -> None:
             rows = mod.run(quick=quick) or []
         except Exception as e:  # keep the harness going
             print(f"{name}_ERROR,0,{type(e).__name__}:{e}")
+            common.pop_sweep_stats()    # drop partial accounting
             doc["modules"][name] = {
                 "wall_s": time.time() - tm,
                 "error": f"{type(e).__name__}: {e}",
                 "rows": [],
             }
             continue
+        sweeps = common.pop_sweep_stats()
         doc["modules"][name] = {
             "wall_s": time.time() - tm,
             "rows": [_parse_row(r) for r in rows],
+            "sweeps": sweeps,
         }
+        if sweeps:
+            print(f"# {name}: {len(sweeps)} sweep(s), "
+                  f"{sum(s['n_compiles'] for s in sweeps)} compile(s), "
+                  f"{sum(s['lane_iters'] for s in sweeps)} lane-iters, "
+                  f"{sum(s['n_repacks'] for s in sweeps)} repack(s), "
+                  f"wall={doc['modules'][name]['wall_s']:.1f}s")
     doc["total_wall_s"] = time.time() - t0
     print(f"# total_wall_s={doc['total_wall_s']:.0f}")
     if args.json:

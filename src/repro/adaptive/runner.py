@@ -28,16 +28,16 @@ import time
 from typing import Iterable, Sequence
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.lock import engine as _engine
 from repro.core.lock.costs import CostModel
-from repro.core.lock.engine import EngineConfig, I32
+from repro.core.lock.engine import EngineConfig
 from repro.core.lock.metrics import extract_globals, extract_segment
 from repro.core.lock.workload import DriftSchedule
 from repro.sweep.grid import SweepPoint
 from repro.sweep.runner import (BucketInfo, SweepResults, MIN_T_BUCKET,
-                                _auto_chunk, _pow2ceil, _stack, _take)
+                                _auto_chunk, _pow2ceil, _take,
+                                run_packed_segment)
 
 from .governor import Policy, SegmentRecord, preset_params
 
@@ -133,16 +133,15 @@ def run_governed(cells: Iterable[GovernorCell], *, horizon: int,
             g_prev.append(jax.device_get(s0.g))
 
         # lane groups: at most chunk_size cells share one vmapped program
-        # (groups of 1 run through the single-lane executable) — same
-        # width-bounding the sweep runner applies, here per segment
+        # (groups of 1 run through the single-lane executable) — the
+        # pow2-width packing lives in the shared packed-segment substrate
+        # (sweep.runner.run_packed_segment); passing each group's packed
+        # state back keeps the stack device-resident across segments, so
+        # a segment costs two small host transfers per group, never
+        # per-lane gathers or re-stacks of the big thread/row arrays
         groups = [list(range(lo, min(lo + chunk_size, G)))
                   for lo in range(0, G, max(chunk_size, 1))]
-        stacks: list = [None] * len(groups)
-        for gi, grp in enumerate(groups):
-            if len(grp) > 1:       # pad lanes to a stable pow2 width
-                gp = _pow2ceil(len(grp))
-                stacks[gi] = _stack([states[j] for j in grp]
-                                    + [states[grp[-1]]] * (gp - len(grp)))
+        gpacked: list = [None] * len(groups)
 
         for k in range(n_segments):
             until = horizon * (k + 1) // n_segments
@@ -155,25 +154,18 @@ def run_governed(cells: Iterable[GovernorCell], *, horizon: int,
                 for c, p in zip(bcells, presets)]
             outs: list = [None] * G
             for gi, grp in enumerate(groups):
-                if len(grp) > 1:
-                    gp = _pow2ceil(len(grp))
-                    dp_stack = _stack([dps[j] for j in grp]
-                                      + [dps[grp[-1]]] * (gp - len(grp)))
-                    untils = jnp.full((gp,), until, I32)
-                    stacks[gi], snaps = _engine._run_seg_batch(
-                        stat, dp_stack, stacks[gi], untils)
-                    jax.block_until_ready(stacks[gi].g.now)
-                    g_host = jax.device_get(stacks[gi].g)
-                    snap_host = jax.device_get(snaps)
+                gpacked[gi], snaps, w = run_packed_segment(
+                    stat, [dps[j] for j in grp],
+                    [states[j] for j in grp], [until] * len(grp),
+                    packed=gpacked[gi])
+                g_host = jax.device_get(gpacked[gi].g)
+                snap_host = jax.device_get(snaps)
+                if w == 1:
+                    outs[grp[0]] = (g_host, snap_host)
+                else:
                     for lane, j in enumerate(grp):
                         outs[j] = (_take(g_host, lane),
                                    _take(snap_host, lane))
-                else:
-                    j = grp[0]
-                    s, snap = _engine._run_seg_dyn(
-                        stat, dps[j], states[j], jnp.asarray(until, I32))
-                    states[j] = s
-                    outs[j] = (jax.device_get(s.g), jax.device_get(snap))
             for j, (c, p) in enumerate(zip(bcells, presets)):
                 g_now, snap = outs[j]
                 r = extract_segment(p, c.n_threads, g_prev[j], g_now)

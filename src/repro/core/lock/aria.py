@@ -19,6 +19,13 @@ params, active thread count) are traced (:class:`AriaDyn`), so the sweep
 subsystem batches many Aria configs under ``jax.vmap`` with one compile per
 (kind, T, L, R) shape; padded lanes (tid >= n_active) generate transactions
 but are masked out of reservations, commits, and metrics.
+
+Segmented execution (``_run_seg_dyn`` / ``_run_seg_batch``) resumes an
+:class:`AriaState` and pauses once ``now`` reaches a traced ``until``;
+batches are never split, so any segmentation replays the identical batch
+sequence (bit-exact in every leaf). Each loop iteration advances ``now``
+by exactly :func:`batch_ticks`, which the sweep compaction scheduler uses
+to turn per-call iteration budgets into per-lane pause targets.
 """
 from __future__ import annotations
 
@@ -110,7 +117,19 @@ def init_aria_state(stat: StaticShape) -> AriaState:
     )
 
 
-def _run_core(stat: StaticShape, dp: AriaDyn) -> AriaState:
+def batch_ticks(workload: WorkloadSpec, costs: CostModel) -> int:
+    """Host-side mirror of the per-batch sim-time advance (``batch_time``
+    in :func:`_make_batch`): every Aria loop iteration moves ``now`` by
+    exactly this many ticks, so sim-time windows convert to iteration
+    counts — the compaction scheduler uses it to size pause targets."""
+    return (workload.txn_len * costs.op_exec + BARRIER
+            + costs.commit_base + costs.sync_lat)
+
+
+def _make_batch(stat: StaticShape, dp: AriaDyn):
+    """Build the per-batch step function (shared by the single-shot and
+    segmented loops, so segmented runs replay the identical batch
+    sequence)."""
     T, R, L = stat.n_threads, stat.n_rows, stat.txn_len
     tids = jnp.arange(T, dtype=I32)
     active = tids < dp.n_active
@@ -156,8 +175,24 @@ def _run_core(stat: StaticShape, dp: AriaDyn) -> AriaState:
             committed_val=committed_val,
         )
 
-    return lax.while_loop(lambda s: s.now < dp.horizon, batch,
-                          init_aria_state(stat))
+    return batch
+
+
+def _run_core(stat: StaticShape, dp: AriaDyn) -> AriaState:
+    return lax.while_loop(lambda s: s.now < dp.horizon,
+                          _make_batch(stat, dp), init_aria_state(stat))
+
+
+def _run_seg_core(stat: StaticShape, dp: AriaDyn, s0: AriaState,
+                  until: jnp.ndarray) -> AriaState:
+    """Resume ``s0`` and run whole batches until ``now`` reaches ``until``
+    (or the horizon). Batches are never split — each loop iteration is one
+    complete batch — so a run segmented at ANY boundaries executes the
+    identical batch sequence and finishes bit-identical to the single-shot
+    run in every leaf (Aria has no idle jumps to cap)."""
+    return lax.while_loop(
+        lambda s: (s.now < dp.horizon) & (s.now < until),
+        _make_batch(stat, dp), s0)
 
 
 @functools.partial(jax.jit, static_argnums=0)
@@ -169,6 +204,23 @@ def _run_dyn(stat: StaticShape, dp: AriaDyn) -> AriaState:
 def _run_batch(stat: StaticShape, dps: AriaDyn) -> AriaState:
     """Run G stacked Aria configs as one vmapped program."""
     return jax.vmap(lambda dp: _run_core(stat, dp))(dps)
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def _run_seg_dyn(stat: StaticShape, dp: AriaDyn, s0: AriaState,
+                 until: jnp.ndarray) -> AriaState:
+    return _run_seg_core(stat, dp, s0, until)
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def _run_seg_batch(stat: StaticShape, dps: AriaDyn, s0s: AriaState,
+                   untils: jnp.ndarray) -> AriaState:
+    """Segmented analogue of :func:`_run_batch`: G resumable lanes, one
+    program. The sweep compaction scheduler drives this with per-lane
+    pause targets (``now + k * batch_ticks``) so heterogeneous-cost lanes
+    retire at staggered calls and freed slots can be repacked."""
+    return jax.vmap(
+        lambda dp, s0, u: _run_seg_core(stat, dp, s0, u))(dps, s0s, untils)
 
 
 def simulate_aria(workload: WorkloadSpec, n_threads: int,

@@ -862,8 +862,44 @@ def _run_batch(stat: StaticShape, dps: DynParams, s0s: SimState) -> SimState:
     ``lax.while_loop`` under vmap keeps stepping until every lane's cond is
     false, select-freezing finished lanes — so each lane's final state is
     bit-identical to running it alone at the same (padded) shape.
+
+    Because ``s0s`` is an argument and the loop cond is a pure function of
+    the state, this entry point is also *resumable*: passing a paused
+    state continues the identical step sequence. The sweep compaction
+    scheduler exploits this by capping ``dp.max_iters`` (traced — no
+    recompile) at ``iters + slice`` per call, pausing lanes at iteration
+    budgets and repacking the unfinished ones; the resulting final states
+    are bit-identical to single-shot runs in EVERY leaf including the
+    ``iters`` diagnostic (nothing about the orbit changes, only where it
+    is observed).
     """
     return jax.vmap(lambda dp, s0: _run_core(stat, dp, s0))(dps, s0s)
+
+
+def stop_ticks(cfg: EngineConfig) -> int:
+    """Host mirror of :func:`_stop_time` for one config."""
+    if cfg.drain:
+        return cfg.horizon + 3 * max(cfg.protocol.wait_timeout, cfg.horizon)
+    return cfg.horizon
+
+
+def run_finished(cfg: EngineConfig, now: int, iters: int,
+                 phase=None) -> bool:
+    """Host mirror of :func:`_run_core`'s loop condition (negated).
+
+    The compaction scheduler retires a paused lane exactly when the
+    single-shot loop would have exited — keeping the retire decision in
+    lockstep with the device cond is what makes compacted results
+    bit-identical. ``phase`` (the (T,) thread-phase vector) is only needed
+    for ``drain`` runs, whose cond also ends when every thread HALTs.
+    """
+    if iters >= cfg.max_iters:
+        return True
+    if cfg.drain:
+        live = True if phase is None else bool((np.asarray(phase)
+                                                != HALT).any())
+        return (not live) or now >= stop_ticks(cfg)
+    return now >= cfg.horizon
 
 
 class SegSnapshot(NamedTuple):

@@ -9,15 +9,25 @@ from __future__ import annotations
 import jax
 
 
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+def _make_mesh(shape, axes):
+    """jax.make_mesh across API generations: jax >= 0.5 takes (and some
+    sharding paths want) explicit Auto axis_types; 0.4.x has neither the
+    kwarg nor ``jax.sharding.AxisType`` — where every mesh axis is Auto
+    already. Regression caught by tests/test_sweep.py's forced-multi-
+    device subprocess: lane sharding never engaged on 0.4.x because mesh
+    construction itself raised."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh(model_axis: int | None = None):
@@ -25,8 +35,7 @@ def make_host_mesh(model_axis: int | None = None):
     n = len(jax.devices())
     m = model_axis or 1
     assert n % m == 0
-    return jax.make_mesh((n // m, m), ("data", "model"),
-                         axis_types=_auto(2))
+    return _make_mesh((n // m, m), ("data", "model"))
 
 
 def elastic_mesh_shape(n_devices: int, model_axis: int = 16):

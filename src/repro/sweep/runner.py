@@ -7,37 +7,60 @@ count and txn length, stacked into an array-of-structs
 and executed under ``jax.vmap`` (``engine._run_batch``). Because every
 protocol flag, cost constant, and workload parameter is traced, a bucket
 compiles **once** no matter how many protocol / skew / thread / abort-rate
-combinations it carries; chunked executions of the same bucket reuse the
-executable (chunks are padded to a fixed G by replicating the last lane).
+combinations it carries.
+
+Within a bucket, vmapped execution (``chunk_size > 1``) defaults to the
+**lockstep compaction scheduler** (DESIGN.md §8): lanes run in iteration
+-budget slices (``dp.max_iters`` capped at ``iters + slice`` — traced, so
+no recompile); between slices finished lanes retire into results
+immediately, survivors are repacked into a smaller pow2-width batch, and
+freed slots are topped up from the not-yet-started queue. A vmapped
+``while_loop`` steps every lane until the slowest finishes, so without
+compaction one 3000-iteration hotspot lane makes its G-1 chunk-mates pay
+``max_iters x G``; with it the dense lane finishes in a (near-)solo pack.
+``compact=False`` restores the PR-1 sort-then-cut chunking
+(:func:`_make_chunks`), which is also the path taken at ``chunk_size=1``
+(sequential lanes have no lockstep to compact away).
 
 On a multi-device host the stacked config axis is sharded over the mesh's
-data axes (``launch.mesh.make_host_mesh`` + ``NamedSharding``), so XLA
-splits lanes across devices; on one device this is a no-op.
+data axes (``launch.mesh.make_host_mesh`` + ``NamedSharding``);
+:func:`_shard_lanes` pads the lane axis to a device-count multiple
+(replicated tail, sliced off by the caller) so placement engages for every
+width.
 
 Per-lane results are bit-identical to running ``simulate()`` per config
-(tests/test_sweep.py asserts this exactly): the vmapped ``while_loop``
-select-freezes finished lanes, and padding is masked out of the engine.
+(tests/test_sweep.py asserts this exactly, for both execution paths): the
+vmapped ``while_loop`` select-freezes finished lanes, padding is masked
+out of the engine, and compaction only re-buckets *which lanes run
+together* — pausing a lane at an iteration budget and resuming it replays
+the identical step sequence, so even the ``iters`` diagnostic matches.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Iterable, Sequence
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
 from repro.core.lock import engine as _engine
 from repro.core.lock import aria as _aria
-from repro.core.lock.costs import protocol_params
-from repro.core.lock.engine import EngineConfig
-from repro.core.lock.metrics import SimResult, bench_row, extract_globals
+from repro.core.lock.costs import PROTOCOLS, protocol_params
+from repro.core.lock.engine import EngineConfig, I32
+from repro.core.lock.metrics import (SimResult, TICKS_PER_SEC, bench_row,
+                                     extract_globals)
 from repro.core.lock.aria import AriaConfig, extract_aria
 
 from .grid import SweepPoint
 
 DEFAULT_CHUNK = 16      # lanes per device program on multi-device hosts
 MIN_T_BUCKET = 64       # small configs share one padded shape
+DEFAULT_SLICES = 8      # iteration-budget slices per nominal lane run
+
+KNOWN_PROTOCOLS = PROTOCOLS + ("aria",)
 
 
 def _pow2ceil(n: int, floor: int = 1) -> int:
@@ -45,29 +68,41 @@ def _pow2ceil(n: int, floor: int = 1) -> int:
     return 1 << (v - 1).bit_length()
 
 
+_EST_WARNED: set[str] = set()
+
+
 def _est_iters(p: SweepPoint) -> float:
-    """Crude engine-iteration estimate for lockstep-aware chunking.
+    """Crude engine-iteration estimate for lockstep-aware scheduling.
 
     A vmapped while_loop steps every lane until the slowest finishes, so
-    chunks should group lanes with similar iteration counts. Iterations
-    track commits (~2 events per commit empirically), so the analytic
-    chain model (ref_engine) is a good relative predictor; only the
-    ordering matters, not the absolute value.
+    similar-iteration lanes should run together (chunk grouping on the
+    sort-then-cut path, admission order + slice sizing on the compaction
+    path). Iterations track commits (~2 events per commit empirically),
+    so the analytic chain model (ref_engine) is a good relative
+    predictor; only the ordering and rough scale matter.
     """
     c = p.costs
-    L = p.workload.txn_len
     if p.protocol == "aria":
-        from repro.core.lock.aria import BARRIER
-        bt = L * c.op_exec + BARRIER + c.commit_base + c.sync_lat
-        return p.horizon / max(bt, 1)
+        return p.horizon / max(_aria.batch_ticks(p.workload, c), 1)
     try:
         from repro.core.lock.ref_engine import predicted_tps
-        from repro.core.lock.metrics import TICKS_PER_SEC
         chain = TICKS_PER_SEC / predicted_tps(
             p.protocol, p.n_threads, c,
             params=protocol_params(p.protocol, **p.over()))
-    except Exception:
-        chain = L * c.op_exec + c.commit_base + c.sync_lat
+    except (ValueError, ZeroDivisionError) as e:
+        # The analytic model not covering a (protocol, knob) combination
+        # is expected — new protocols land as DynParams flags before their
+        # ref model does. Anything else (KeyError from an unknown name,
+        # TypeError, shape errors) is a real bug and must propagate;
+        # run_sweep validates names up front so it fails loudly there.
+        if p.protocol not in _EST_WARNED:
+            _EST_WARNED.add(p.protocol)
+            warnings.warn(
+                f"_est_iters: analytic model failed for {p.protocol!r} "
+                f"({e}); falling back to the cost-chain estimate "
+                f"(scheduling order may degrade)", RuntimeWarning,
+                stacklevel=2)
+        chain = p.workload.txn_len * c.op_exec + c.commit_base + c.sync_lat
     return p.horizon / max(chain, 1)
 
 
@@ -76,8 +111,10 @@ def _make_chunks(bpts: list[SweepPoint], chunk_size: int
     """Sort by estimated iterations (desc), then cut fixed-size chunks.
 
     Sorting groups similar-density lanes so no chunk pairs a 3000-iteration
-    lane with near-idle ones; fixed chunk sizes keep the executable count
-    at one per (shape bucket, G) — exactly one when G divides the bucket.
+    lane with near-idle ones — as long as the estimate is right and the
+    densities cluster; the compaction scheduler removes both assumptions.
+    Fixed chunk sizes keep the executable count at one per (shape bucket,
+    G) — exactly one when G divides the bucket.
     """
     spts = sorted(bpts, key=_est_iters, reverse=True)
     return [spts[lo:lo + chunk_size]
@@ -107,8 +144,13 @@ class BucketInfo:
     pad_threads: int
     pad_len: int
     n_points: int
-    n_chunks: int
+    n_chunks: int           # device calls (chunks, or compaction slices)
     wall_s: float
+    # --- compaction accounting (zero / empty on the sort-then-cut path) ---
+    compacted: bool = False
+    n_repacks: int = 0      # calls after which survivors were re-gathered
+    lane_iters: int = 0     # sum over calls of width x max lane-iterations
+    repack_log: tuple = ()  # per-call (n_live, width, max_delta_iters)
 
 
 @dataclasses.dataclass
@@ -133,6 +175,16 @@ class SweepResults:
 
     def names(self) -> list[str]:
         return [p.name for p in self.points]
+
+    @property
+    def lane_iters(self) -> int:
+        """Total vmapped lane-iterations paid (width x slowest-lane iters,
+        summed over device calls) — the sweep's modeled lockstep cost."""
+        return sum(b.lane_iters for b in self.buckets)
+
+    @property
+    def n_repacks(self) -> int:
+        return sum(b.n_repacks for b in self.buckets)
 
 
 def _bucket_key(p: SweepPoint, thread_bucket) -> tuple:
@@ -185,43 +237,382 @@ def _stack(dps: Sequence) -> object:
     return jax.tree.map(lambda *xs: jnp.stack(xs), *dps)
 
 
+def _pack(trees: Sequence, g: int) -> object:
+    """Stack n lane pytrees to width ``g``, replicating the last lane into
+    the tail pad — the pow2 widths keep the executable set bounded."""
+    trees = list(trees)
+    return _stack(trees + [trees[-1]] * (g - len(trees)))
+
+
 def _shard_lanes(tree, n_lanes: int):
     """Shard the leading config axis over the data axes of a host mesh.
 
-    No-op on a single device or when the lane count doesn't divide; lanes
-    always stay correct either way — this only places them.
+    When the lane count doesn't divide the device count, the lane axis is
+    first padded to the next device-count multiple by replicating the last
+    lane — so multi-device placement ALWAYS engages (12 lanes on 8 devices
+    used to silently run on one). Returns ``(tree, padded_width)``; the
+    caller reads only its real lanes, so the replicated tail is inert.
+    No-op (width unchanged) on a single device.
     """
     n_dev = len(jax.devices())
-    if n_dev <= 1 or n_lanes % n_dev:
-        return tree
-    from jax.sharding import NamedSharding, PartitionSpec as P
-    from repro.launch.mesh import make_host_mesh
-    mesh = make_host_mesh()
-    sh = NamedSharding(mesh, P("data"))
-    return jax.tree.map(lambda x: jax.device_put(x, sh), tree)
+    if n_dev <= 1:
+        return tree, n_lanes
+    g = -(-n_lanes // n_dev) * n_dev
+    if g != n_lanes:
+        pad = g - n_lanes
+        tree = jax.tree.map(
+            lambda x: jnp.concatenate(
+                [x, jnp.repeat(x[-1:], pad, axis=0)]), tree)
+    sh = _data_sharding(n_dev)
+    return jax.tree.map(lambda x: jax.device_put(x, sh), tree), g
+
+
+_SHARDING_CACHE: dict = {}
+
+
+def _data_sharding(n_dev: int):
+    """Lane-axis sharding over the host mesh, built once per process —
+    the compaction path shards every device call, so rebuilding the mesh
+    each time would be pure overhead (the device set is fixed)."""
+    if n_dev not in _SHARDING_CACHE:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch.mesh import make_host_mesh
+        _SHARDING_CACHE[n_dev] = NamedSharding(make_host_mesh(),
+                                               P("data"))
+    return _SHARDING_CACHE[n_dev]
 
 
 def _cache_sizes() -> int:
     return (_engine._run_batch._cache_size()
             + _aria._run_batch._cache_size()
             + _engine._run_dyn._cache_size()
-            + _aria._run_dyn._cache_size())
+            + _aria._run_dyn._cache_size()
+            + _aria._run_seg_dyn._cache_size()
+            + _aria._run_seg_batch._cache_size())
 
 
 def _take(tree, i: int):
     return jax.tree.map(lambda x: x[i], tree)
 
 
+def run_packed_segment(stat, dps, states, untils, *, shard: bool = False,
+                       packed=None):
+    """Advance n engine lanes one segment as a single packed program.
+
+    The shared packed-segment substrate: lanes are stacked to a pow2
+    width (tail replicated via :func:`_pack`), optionally sharded over
+    the host mesh, and stepped through ``engine._run_seg_batch``; a
+    single lane reuses the ``_run_seg_dyn`` executable, unstacked.
+
+    Returns ``(packed_states, packed_snaps, width)`` — lane ``i`` of
+    each packed output is input lane ``i`` (slice with :func:`_take`, on
+    device or after a batched ``device_get``); ``width == 1`` returns
+    the bare state/snapshot. Pass ``packed_states`` back as ``packed``
+    on the next segment of the SAME lane set to keep the stack resident
+    on device (``states`` is only read when ``packed`` is None) — the
+    governed runner (``repro.adaptive``) does this for every segment, so
+    an unchanged group never pays per-lane gathers or re-stacks, exactly
+    like the sweep compaction scheduler's unchanged-pack reuse.
+    """
+    n = len(dps)
+    if n == 1:
+        s0 = packed if packed is not None else states[0]
+        s, snap = _engine._run_seg_dyn(stat, dps[0], s0,
+                                       jnp.asarray(untils[0], I32))
+        return s, snap, 1
+    if packed is not None:
+        s_s = packed
+        g = jax.tree.leaves(s_s)[0].shape[0]
+        dp_s = _pack(dps, g)
+        u = jnp.asarray(list(untils) + [untils[-1]] * (g - n), I32)
+        if shard:
+            (dp_s, u), _ = _shard_lanes((dp_s, u), g)
+    else:
+        g = _pow2ceil(n)
+        dp_s, s_s = _pack(dps, g), _pack(states, g)
+        u = jnp.asarray(list(untils) + [untils[-1]] * (g - n), I32)
+        if shard:
+            (dp_s, s_s, u), g = _shard_lanes((dp_s, s_s, u), g)
+    out, snaps = _engine._run_seg_batch(stat, dp_s, s_s, u)
+    jax.block_until_ready(out.g.now)
+    return out, snaps, g
+
+
+# ---------------------------------------------------------------------------
+# compaction scheduler
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _Lane:
+    """One point's resumable execution (host-side scheduling mirror)."""
+    p: SweepPoint
+    dp: object                  # DynParams | AriaDyn
+    cfg: EngineConfig | None    # engine family only
+    bt: int = 1                 # aria ticks per batch (loop iteration)
+    state: object = None        # device SimState | AriaState once admitted
+    now: int = 0
+    iters: int = 0
+    wall_us: float = 0.0
+
+
+def _run_bucket_compact(family: str, stat, bpts: list[SweepPoint],
+                        pad_t: int, pad_l: int, chunk_size: int,
+                        shard: bool, slice_iters: int | None,
+                        metrics: dict, wall_us: dict):
+    """Run one bucket with lockstep compaction (see module docstring).
+
+    Slices are **iteration budgets**, not sim-time windows: every lane in
+    a grid typically shares the horizon, so sim-time boundaries would
+    retire all lanes on the same slice and never free width. Iteration
+    budgets are the resource the vmapped loop actually spends — a sparse
+    lane finishes inside its first budget and retires while a dense one
+    keeps paying, in an ever-narrower pack. For the engine the budget is
+    the traced ``dp.max_iters`` cap (resuming replays the identical step
+    sequence, so results — including ``Globals.iters`` — stay bitwise
+    equal to single-shot runs); for Aria, whose every loop iteration
+    advances ``now`` by exactly ``batch_ticks``, the equivalent per-lane
+    pause target is ``now + slice * batch_ticks``.
+    """
+    queue: list[_Lane] = []
+    ests = sorted(((_est_iters(p), i) for i, p in enumerate(bpts)),
+                  key=lambda ei: ei[0], reverse=True)
+    for _, i in ests:
+        p = bpts[i]
+        if family == "engine":
+            cfg = _engine_config(p)
+            _, dp = _engine.split_config(cfg, pad_threads=pad_t,
+                                         pad_len=pad_l)
+            queue.append(_Lane(p=p, dp=dp, cfg=cfg))
+        else:
+            _, dp = _aria.split_aria(
+                AriaConfig(p.workload, p.costs, p.n_threads, p.horizon),
+                pad_threads=pad_t, pad_len=pad_l)
+            queue.append(_Lane(p=p, dp=dp, cfg=None,
+                               bt=_aria.batch_ticks(p.workload, p.costs)))
+    # Budget scale: ~1/DEFAULT_SLICES of the densest lane's estimated
+    # iterations (est tracks commits ~ iters/2; the sort above puts it at
+    # the head). A misestimate only changes the call count, never any
+    # result.
+    est_max = max(ests[0][0], 1.0)
+    budget = slice_iters or max(256, int(2.0 * est_max / DEFAULT_SLICES))
+
+    active: list[_Lane] = []
+    n_calls = n_repacks = lane_iters = 0
+    repack_log: list[tuple] = []
+    # When a call retires nobody, the next call runs the SAME lanes in the
+    # same slots — reuse the packed output states directly instead of
+    # per-lane _take gathers + a fresh _stack (pure dispatch overhead on
+    # the hot loop; admissions only ever follow retirements, so an
+    # unchanged pack really is unchanged).
+    packed = None               # (states_pytree_of_width_g_run, g_run)
+    while queue or active:
+        while queue and len(active) < chunk_size:
+            ln = queue.pop(0)
+            ln.state = (_engine.init_state_dyn(stat, ln.dp)
+                        if family == "engine"
+                        else _aria.init_aria_state(stat))
+            active.append(ln)
+        n = len(active)
+        # full pools run at exactly chunk_size (a device multiple on
+        # meshes — pow2ceil would overshoot a non-pow2 cap like 24);
+        # the drain tail descends the pow2 width ladder below it
+        g = min(_pow2ceil(n), chunk_size)
+        t0 = time.perf_counter()
+        phases = None
+        if family == "engine":
+            dps = [ln.dp._replace(max_iters=jnp.asarray(
+                       min(ln.iters + budget, ln.cfg.max_iters), I32))
+                   for ln in active]
+            if g == 1 and packed is None:
+                out = _engine._run_dyn(stat, dps[0], active[0].state)
+                out = jax.tree.map(lambda x: x[None], out)
+                g_run = 1
+            else:
+                if packed is not None:
+                    s_s, g_run = packed
+                    dp_s = _pack(dps, g_run)
+                    if shard:
+                        dp_s, _ = _shard_lanes(dp_s, g_run)
+                else:
+                    dp_s = _pack(dps, g)
+                    s_s = _pack([ln.state for ln in active], g)
+                    g_run = g
+                    if shard:
+                        (dp_s, s_s), g_run = _shard_lanes((dp_s, s_s), g)
+                out = _engine._run_batch(stat, dp_s, s_s)
+            jax.block_until_ready(out.g.now)
+            host = jax.device_get(out.g)
+            if any(ln.cfg.drain for ln in active):
+                phases = jax.device_get(out.th.phase)
+        else:
+            # clamp to the horizon: the cond ANDs `now < horizon` anyway,
+            # and an unclamped target can overflow i32 for large budgets
+            # x batch times
+            untils = [min(ln.now + budget * ln.bt, ln.p.horizon)
+                      for ln in active]
+            if g == 1 and packed is None:
+                out = _aria._run_seg_dyn(stat, active[0].dp,
+                                         active[0].state,
+                                         jnp.asarray(untils[0], I32))
+                out = jax.tree.map(lambda x: x[None], out)
+                g_run = 1
+            else:
+                if packed is not None:
+                    s_s, g_run = packed
+                    dp_s = _pack([ln.dp for ln in active], g_run)
+                    u = jnp.asarray(
+                        untils + [untils[-1]] * (g_run - n), I32)
+                    if shard:
+                        (dp_s, u), _ = _shard_lanes((dp_s, u), g_run)
+                else:
+                    dp_s = _pack([ln.dp for ln in active], g)
+                    s_s = _pack([ln.state for ln in active], g)
+                    u = jnp.asarray(untils + [untils[-1]] * (g - n), I32)
+                    g_run = g
+                    if shard:
+                        (dp_s, s_s, u), g_run = _shard_lanes(
+                            (dp_s, s_s, u), g)
+                out = _aria._run_seg_batch(stat, dp_s, s_s, u)
+            jax.block_until_ready(out.now)
+            host = jax.device_get(_aria.metrics_view(out))
+
+        per_lane_us = (time.perf_counter() - t0) * 1e6 / n
+        max_d = 0
+        done_mask = []
+        for i, ln in enumerate(active):
+            h = _take(host, i)
+            if family == "engine":
+                delta = int(h.iters) - ln.iters
+                ln.iters, ln.now = int(h.iters), int(h.now)
+                done = _engine.run_finished(
+                    ln.cfg, ln.now, ln.iters,
+                    phase=None if phases is None else phases[i])
+            else:
+                delta = (int(h.now) - ln.now) // max(ln.bt, 1)
+                ln.now = int(h.now)
+                done = ln.now >= ln.p.horizon
+            max_d = max(max_d, delta)
+            ln.wall_us += per_lane_us
+            if done:
+                metrics[ln.p.name] = (
+                    extract_globals(ln.p.protocol, ln.p.n_threads, h)
+                    if family == "engine"
+                    else extract_aria(ln.p.n_threads, h))
+                wall_us[ln.p.name] = ln.wall_us
+                ln.state = None         # free the device arrays
+            done_mask.append(done)
+        retired = sum(done_mask)
+        if retired or g_run == 1:       # composition changes: unpack
+            # (width-1 packs always unpack so solo lanes keep riding the
+            # _run_dyn executable simulate() shares)
+            survivors = []
+            for i, ln in enumerate(active):
+                if not done_mask[i]:
+                    ln.state = _take(out, i)
+                    survivors.append(ln)
+            active = survivors
+            packed = None
+        else:                           # unchanged: reuse the pack as-is
+            packed = (out, g_run)
+        n_calls += 1
+        lane_iters += g_run * max_d
+        repack_log.append((n, g_run, max_d))
+        if retired and active:
+            n_repacks += 1
+    return n_calls, n_repacks, lane_iters, tuple(repack_log)
+
+
+def _run_bucket_chunks(family: str, bpts: list[SweepPoint],
+                       pad_t: int, pad_l: int, chunk_size: int,
+                       shard: bool, metrics: dict, wall_us: dict):
+    """The PR-1 sort-then-cut path (``compact=False`` / sequential)."""
+    n_chunks = 0
+    lane_iters = 0
+    for chunk in _make_chunks(bpts, chunk_size):
+        n_real = len(chunk)
+        # pad partial chunks (replicated last lane) to a stable pow2 G
+        # (capped at chunk_size, which need not be pow2) so the handful
+        # of (shape, G) executables get reused across chunks, buckets,
+        # and figure modules; _shard_lanes pads further to a device
+        # multiple when a mesh is present
+        g = min(_pow2ceil(n_real), chunk_size)
+        chunk = chunk + [chunk[-1]] * (g - n_real)
+        t0 = time.perf_counter()
+        if family == "engine":
+            parts = [_engine.split_config(_engine_config(p),
+                                          pad_threads=pad_t,
+                                          pad_len=pad_l) for p in chunk]
+            stat = parts[0][0]
+            if g == 1:      # share the simulate() executable
+                dp = parts[0][1]
+                out = _engine._run_dyn(stat, dp,
+                                       _engine.init_state_dyn(stat, dp))
+                out = jax.tree.map(lambda x: x[None], out)
+                g_run = 1
+            else:
+                dps = _stack([dp for _, dp in parts])
+                s0s = _stack([_engine.init_state_dyn(stat, dp)
+                              for _, dp in parts])
+                g_run = g
+                if shard:
+                    (dps, s0s), g_run = _shard_lanes((dps, s0s), g)
+                out = _engine._run_batch(stat, dps, s0s)
+            jax.block_until_ready(out.g.now)
+        else:
+            parts = [_aria.split_aria(
+                AriaConfig(p.workload, p.costs, p.n_threads, p.horizon),
+                pad_threads=pad_t, pad_len=pad_l) for p in chunk]
+            stat = parts[0][0]
+            if g == 1:
+                out = _aria._run_dyn(stat, parts[0][1])
+                out = jax.tree.map(lambda x: x[None], out)
+                g_run = 1
+            else:
+                dps = _stack([dp for _, dp in parts])
+                g_run = g
+                if shard:
+                    dps, g_run = _shard_lanes(dps, g)
+                out = _aria._run_batch(stat, dps)
+            jax.block_until_ready(out.now)
+        # only the metrics leaves leave the device (the thread/row
+        # state is G x (T,L)/(R,) arrays extract never reads)
+        host = jax.device_get(out.g if family == "engine"
+                              else _aria.metrics_view(out))
+        per_pt = (time.perf_counter() - t0) * 1e6 / n_real
+        if family == "engine":
+            lane_iters += g_run * int(np.asarray(host.iters).max())
+        else:
+            lane_iters += g_run * max(
+                int(np.asarray(host.now)[j])
+                // max(_aria.batch_ticks(p.workload, p.costs), 1)
+                for j, p in enumerate(chunk[:n_real]))
+        for j, p in enumerate(chunk[:n_real]):
+            sliced = _take(host, j)
+            if family == "engine":
+                metrics[p.name] = extract_globals(p.protocol,
+                                                  p.n_threads, sliced)
+            else:
+                metrics[p.name] = extract_aria(p.n_threads, sliced)
+            wall_us[p.name] = per_pt
+        n_chunks += 1
+    return n_chunks, 0, lane_iters, ()
+
+
 def run_sweep(points: Iterable[SweepPoint], *, chunk_size: int | None = None,
               thread_bucket: str = "pow2", shard: bool = True,
+              compact: bool | None = None, slice_iters: int | None = None,
               verbose: bool = False) -> SweepResults:
     """Run every point, batched per shape bucket. Order is preserved.
 
-    ``chunk_size`` fixes the lanes per device program (vmap width); the
-    default adapts to the hardware (see :func:`_auto_chunk`). Partial
-    chunks are padded by replicating the last lane up to a pow2 width so
-    the few (shape, G) executables get reused. ``thread_bucket`` picks the
-    bucketing strategy (see :func:`_bucket_key`).
+    ``chunk_size`` bounds the lanes per device program (vmap width); the
+    default adapts to the hardware (see :func:`_auto_chunk`).
+    ``compact`` picks the execution path: ``None`` (default) enables the
+    lockstep compaction scheduler whenever lanes are actually vmapped
+    (``chunk_size > 1``); ``False`` forces the sort-then-cut chunking;
+    ``True`` forces compaction even at width 1. ``slice_iters`` overrides
+    the per-call iteration budget (default: ~1/8 of the densest lane's
+    estimate, floor 256). ``thread_bucket`` picks the bucketing strategy
+    (see :func:`_bucket_key`). Results are bit-identical on every path.
     """
     points = list(points)
     names = [p.name for p in points]
@@ -229,9 +620,15 @@ def run_sweep(points: Iterable[SweepPoint], *, chunk_size: int | None = None,
         dup = sorted({n for n in names if names.count(n) > 1})
         raise ValueError(f"duplicate sweep point names: {dup[:5]}")
     for p in points:            # fail fast, before any bucket burns time
+        if p.protocol not in KNOWN_PROTOCOLS:
+            raise ValueError(
+                f"sweep point {p.name!r}: unknown protocol "
+                f"{p.protocol!r} (known: {', '.join(KNOWN_PROTOCOLS)})")
         if p.protocol == "aria":
             _check_aria_point(p)
     chunk_size = chunk_size or _auto_chunk()
+    if compact is None:
+        compact = chunk_size > 1
 
     buckets: dict[tuple, list[int]] = {}
     for i, p in enumerate(points):
@@ -252,77 +649,29 @@ def run_sweep(points: Iterable[SweepPoint], *, chunk_size: int | None = None,
             pad_t = max(p.n_threads for p in bpts)
             pad_l = max(p.workload.txn_len for p in bpts)
         t_bucket = time.perf_counter()
-        n_chunks = 0
 
-        for chunk in _make_chunks(bpts, chunk_size):
-            n_real = len(chunk)
-            # pad partial chunks (replicated last lane) to a stable G so
-            # the handful of (shape, G) executables get reused across
-            # chunks, buckets, and figure modules: pow2 on one device,
-            # a device-count multiple otherwise so lane sharding divides
-            n_dev = len(jax.devices())
-            if n_dev > 1 and n_real > 1:
-                g = -(-n_real // n_dev) * n_dev
-            else:
-                g = _pow2ceil(n_real)
-            chunk = chunk + [chunk[-1]] * (g - n_real)
-            t0 = time.perf_counter()
-            if family == "engine":
-                parts = [_engine.split_config(_engine_config(p),
-                                              pad_threads=pad_t,
-                                              pad_len=pad_l) for p in chunk]
-                stat = parts[0][0]
-                if g == 1:      # share the simulate() executable
-                    dp = parts[0][1]
-                    out = _engine._run_dyn(stat, dp,
-                                           _engine.init_state_dyn(stat, dp))
-                    out = jax.tree.map(lambda x: x[None], out)
-                else:
-                    dps = _stack([dp for _, dp in parts])
-                    s0s = _stack([_engine.init_state_dyn(stat, dp)
-                                  for _, dp in parts])
-                    if shard:
-                        dps, s0s = _shard_lanes((dps, s0s), g)
-                    out = _engine._run_batch(stat, dps, s0s)
-                jax.block_until_ready(out.g.now)
-            else:
-                parts = [_aria.split_aria(
-                    AriaConfig(p.workload, p.costs, p.n_threads, p.horizon),
-                    pad_threads=pad_t, pad_len=pad_l) for p in chunk]
-                stat = parts[0][0]
-                if g == 1:
-                    out = _aria._run_dyn(stat, parts[0][1])
-                    out = jax.tree.map(lambda x: x[None], out)
-                else:
-                    dps = _stack([dp for _, dp in parts])
-                    if shard:
-                        dps = _shard_lanes(dps, g)
-                    out = _aria._run_batch(stat, dps)
-                jax.block_until_ready(out.now)
-            # only the metrics leaves leave the device (the thread/row
-            # state is G x (T,L)/(R,) arrays extract never reads)
-            host = jax.device_get(out.g if family == "engine"
-                                  else _aria.metrics_view(out))
-            per_pt = (time.perf_counter() - t0) * 1e6 / n_real
-            for j, p in enumerate(chunk[:n_real]):
-                sliced = _take(host, j)
-                if family == "engine":
-                    metrics[p.name] = extract_globals(p.protocol,
-                                                      p.n_threads, sliced)
-                else:
-                    metrics[p.name] = extract_aria(p.n_threads, sliced)
-                wall_us[p.name] = per_pt
-            n_chunks += 1
+        if compact:
+            stat = _engine.StaticShape(kind=kind, n_threads=pad_t,
+                                       txn_len=pad_l, n_rows=n_rows)
+            n_chunks, n_rep, lit, rlog = _run_bucket_compact(
+                family, stat, bpts, pad_t, pad_l, chunk_size, shard,
+                slice_iters, metrics, wall_us)
+        else:
+            n_chunks, n_rep, lit, rlog = _run_bucket_chunks(
+                family, bpts, pad_t, pad_l, chunk_size, shard,
+                metrics, wall_us)
 
         infos.append(BucketInfo(
             family=family, kind=kind, n_rows=n_rows, pad_threads=pad_t,
             pad_len=pad_l, n_points=len(bpts), n_chunks=n_chunks,
-            wall_s=time.perf_counter() - t_bucket))
+            wall_s=time.perf_counter() - t_bucket, compacted=compact,
+            n_repacks=n_rep, lane_iters=lit, repack_log=rlog))
         if verbose:
             b = infos[-1]
             print(f"# sweep bucket {family}/{kind}/R{n_rows}: "
                   f"{b.n_points} pts, T<={pad_t}, L<={pad_l}, "
-                  f"{b.n_chunks} chunk(s), {b.wall_s:.1f}s")
+                  f"{b.n_chunks} call(s), {b.n_repacks} repack(s), "
+                  f"{b.lane_iters} lane-iters, {b.wall_s:.1f}s")
 
     return SweepResults(
         points=points, metrics=metrics, wall_us=wall_us, buckets=infos,

@@ -12,6 +12,13 @@ tps/aborts, the preset the governor chose, end-of-segment contention
 state). Points without a time series simply omit the key, so v2 documents
 of plain sweeps are byte-compatible with v1 ones apart from the schema
 tag, and :func:`load_results` reads both generations.
+
+Compaction-scheduler runs additionally carry their accounting in the
+``buckets`` records (additive ``BucketInfo`` fields, still v2):
+``compacted``, ``n_repacks``, ``lane_iters`` (width x slowest-lane
+iterations summed over device calls — the modeled lockstep cost), and
+``repack_log`` (one ``[n_live, width, max_delta_iters]`` triple per
+device call). Sort-then-cut runs write zeros / an empty log.
 """
 from __future__ import annotations
 

@@ -303,6 +303,49 @@ class TestRunGoverned:
         rows = summarize(res)
         assert len(rows) == 2 and rows[0].startswith("a,")
 
+    def test_packed_segment_substrate_bitexact_per_lane(self):
+        """run_packed_segment (the substrate shared by the governed runner
+        and the sweep compaction scheduler) must equal per-lane
+        _run_seg_dyn in EVERY state leaf — heterogeneous protocols,
+        drift-schedule workloads, per-lane untils, and the device-
+        resident packed resume (``packed=``) included."""
+        from repro.sweep.runner import run_packed_segment, _take
+        drift = hot_migration(
+            WorkloadSpec(kind="hotspot_update", txn_len=2, n_rows=1024),
+            4, n_sites=4, period=1)
+        cfg0 = EngineConfig(protocol=protocol_params("group"),
+                            costs=CostModel(), workload=drift.spec(0),
+                            n_threads=8, horizon=HORIZON)
+        stat, _ = split_config(cfg0, pad_threads=64)
+        protos = ("group", "mysql", "o2")
+        dps, states = [], []
+        for i, proto in enumerate(protos):
+            _, dp = split_config(dataclasses.replace(
+                cfg0, protocol=protocol_params(proto),
+                workload=drift.spec(i)), pad_threads=64)
+            dps.append(dp)
+            states.append(E.init_state_dyn(stat, dp))
+        untils = [10_000, 14_000, 18_000]
+        packed, snaps, w = run_packed_segment(stat, dps, states, untils)
+        assert w == 4                       # 3 lanes pow2-padded
+        # second segment resumes from the packed stack, no re-pack
+        untils2 = [20_000, 24_000, 28_000]
+        packed2, snaps2, _ = run_packed_segment(stat, dps, None, untils2,
+                                                packed=packed)
+        for i in range(3):
+            ref, ref_snap = E.run_segment(stat, dps[i], states[i],
+                                          untils[i])
+            for a, b in zip(jax.tree.leaves(_take(packed, i)),
+                            jax.tree.leaves(ref)):
+                assert (np.asarray(a) == np.asarray(b)).all()
+            for a, b in zip(jax.tree.leaves(_take(snaps, i)),
+                            jax.tree.leaves(ref_snap)):
+                assert (np.asarray(a) == np.asarray(b)).all()
+            ref2, _ = E.run_segment(stat, dps[i], ref, untils2[i])
+            for a, b in zip(jax.tree.leaves(_take(packed2, i)),
+                            jax.tree.leaves(ref2)):
+                assert (np.asarray(a) == np.asarray(b)).all()
+
     def test_batched_lanes_match_sequential(self):
         """chunk_size>1 (vmapped segmented lanes) must be bit-identical
         to the sequential per-lane path, switches included."""
