@@ -1,0 +1,67 @@
+"""Fig 16 (extension): Brook-2PL vs mysql-2PL / bamboo / group.
+
+Two grids on the sweep substrate (one engine compile per shape bucket,
+brook2pl riding the same ``DynParams`` flags as every other protocol):
+
+* ``fig16a`` — zipf skew ramp: multi-row write transactions over a Zipf
+  key space, skew axis. This is the deadlock regime: mysql pays the
+  detection walk (``dd_coeff * queue``) on every grant and rolls victims
+  back; detection-free queue protocols stall outright. Brook-2PL's
+  chop-ordered acquisition makes waits-for cycles impossible (zero
+  detection ticks, zero deadlock rollbacks) and per-op release holds hot
+  rows only ``[acquire, last-use]``.
+* ``fig16b`` — TPC-C-like warehouse sweep: contention via warehouse
+  count; the chop analysis orders stock < district < warehouse so the
+  hottest (warehouse) lock is taken last and released first.
+
+Emits an ``fig16_adv`` row per grid with the brook-vs-mysql commit ratio
+at the most contended point plus brook's summed deadlock-detection ticks
+and deadlock (forced) rollbacks — the quick-mode acceptance is
+``brook_vs_mysql > 1`` on the high-skew zipf points with both counters
+at zero (asserted by the CI ``brook-smoke`` job).
+"""
+from .common import emit, sweep_rows
+from repro.core.lock import WorkloadSpec
+from repro.sweep import expand, grid
+
+ZIPF = WorkloadSpec(kind="zipf", txn_len=4, n_rows=4096)
+TPCC = WorkloadSpec(kind="tpcc", txn_len=10, n_rows=8192, write_ratio=0.6)
+PROTOS = ["mysql", "bamboo", "group", "brook2pl"]
+
+
+def _adv_row(tag, res, names_by_proto, at):
+    """brook-vs-mysql ratio at the most contended axis point ``at``."""
+    brook = res[names_by_proto["brook2pl"][at]]
+    mysql = res[names_by_proto["mysql"][at]]
+    dd = sum(res[n].dd_ticks for n in names_by_proto["brook2pl"])
+    fa = sum(res[n].forced_aborts for n in names_by_proto["brook2pl"])
+    return (f"fig16_{tag}_adv,0,"
+            f"brook_vs_mysql={brook.commits / max(mysql.commits, 1):.3f}"
+            f";brook_dd_ticks={dd};brook_deadlock_aborts={fa}")
+
+
+def run(quick=True):
+    horizon = 150_000 if quick else 600_000
+    sfs = [0.6, 0.9, 1.2] if quick else [0.3, 0.6, 0.8, 0.9, 1.1, 1.3]
+    whs = [1, 8] if quick else [1, 4, 16, 64]
+
+    pts = grid(PROTOS, expand(ZIPF, tag_fmt="sf{zipf_s}", zipf_s=sfs),
+               64, horizon=horizon,
+               name_fmt="fig16a_{protocol}_{workload}")
+    pts += grid(PROTOS,
+                expand(TPCC, tag_fmt="wh{n_warehouses}",
+                       n_warehouses=whs),
+                128, horizon=horizon,
+                name_fmt="fig16b_{protocol}_{workload}")
+    rows, res = sweep_rows(pts)
+
+    out = list(rows)
+    a_names = {p: [f"fig16a_{p}_sf{s}" for s in sfs] for p in PROTOS}
+    b_names = {p: [f"fig16b_{p}_wh{w}" for w in whs] for p in PROTOS}
+    out.append(_adv_row("zipf", res, a_names, at=len(sfs) - 1))
+    out.append(_adv_row("tpcc", res, b_names, at=0))
+    return emit(out)
+
+
+if __name__ == "__main__":
+    run()

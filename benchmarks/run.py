@@ -50,13 +50,14 @@ def main() -> None:
     from . import (common, compaction_bench, fig02_motivation,
                    fig06_ablation, fig07_mix, fig08_scalability, fig09_sync,
                    fig10_abort_skew, fig12_tpcc, fig13_batch, fig14_recovery,
-                   fig15_adaptive, kernel_bench, roofline_table)
+                   fig15_adaptive, fig16_brook, kernel_bench, roofline_table)
     modules = {
         "fig02": fig02_motivation, "fig06": fig06_ablation,
         "fig07": fig07_mix, "fig08": fig08_scalability,
         "fig09": fig09_sync, "fig10": fig10_abort_skew,
         "fig12": fig12_tpcc, "fig13": fig13_batch,
         "fig14": fig14_recovery, "fig15": fig15_adaptive,
+        "fig16": fig16_brook,
         "compaction": compaction_bench,
         "kernels": kernel_bench, "roofline": roofline_table,
     }
@@ -82,8 +83,12 @@ def main() -> None:
             }
             continue
         sweeps = common.pop_sweep_stats()
+        # per-module quick marker: a merged doc (--only into an existing
+        # baseline, below) can mix modes, so the top-level flag alone
+        # cannot be trusted for cross-commit comparisons
         doc["modules"][name] = {
             "wall_s": time.time() - tm,
+            "quick": quick,
             "rows": [_parse_row(r) for r in rows],
             "sweeps": sweeps,
         }
@@ -96,8 +101,31 @@ def main() -> None:
     doc["total_wall_s"] = time.time() - t0
     print(f"# total_wall_s={doc['total_wall_s']:.0f}")
     if args.json:
+        out = doc
+        if args.only:
+            # a single-module run refreshes that module's entry INSIDE an
+            # existing baseline instead of replacing the whole document —
+            # the CI smoke jobs each run `--only figNN --json
+            # BENCH_run.json` and must not wipe the other modules' perf
+            # trajectory. total_wall_s becomes the sum of module walls
+            # (the only consistent meaning for a merged doc).
+            try:
+                with open(args.json) as f:
+                    prev = json.load(f)
+                prev["modules"].update(doc["modules"])
+                prev["total_wall_s"] = sum(
+                    m.get("wall_s", 0.0) for m in prev["modules"].values())
+                out = prev
+            except FileNotFoundError:
+                pass        # fresh file: write this run alone
+            except (OSError, ValueError, KeyError, TypeError,
+                    AttributeError) as e:
+                # corrupt/foreign baseline: overwriting loses the other
+                # modules' trajectory — say so loudly in the output the
+                # CI log keeps, rather than wiping it silently
+                print(f"# merge_skipped={type(e).__name__}: {e}")
         with open(args.json, "w") as f:
-            json.dump(doc, f, indent=1)
+            json.dump(out, f, indent=1)
             f.write("\n")
         print(f"# json_written={args.json}")
 

@@ -17,13 +17,13 @@ Quickstart::
         horizon=240_000, n_segments=12)
 """
 from .governor import (PRESETS, DEFAULT_ARMS, preset_params, preset_family,
-                       SegmentRecord, Policy, FixedPolicy, QueueRulePolicy,
-                       EpsilonGreedyPolicy)
+                       switch_safe, SegmentRecord, Policy, FixedPolicy,
+                       QueueRulePolicy, EpsilonGreedyPolicy)
 from .runner import GovernorCell, run_governed, preset_timeline
 
 __all__ = [
     "PRESETS", "DEFAULT_ARMS", "preset_params", "preset_family",
-    "SegmentRecord", "Policy", "FixedPolicy", "QueueRulePolicy",
-    "EpsilonGreedyPolicy",
+    "switch_safe", "SegmentRecord", "Policy", "FixedPolicy",
+    "QueueRulePolicy", "EpsilonGreedyPolicy",
     "GovernorCell", "run_governed", "preset_timeline",
 ]

@@ -50,6 +50,35 @@ PRESETS: dict[str, tuple[str, dict, str]] = {
     "group_eager": ("group", {"hot_threshold": 8}, "queue"),
     "group_batch4": ("group", {"batch_size": 4}, "queue"),
     "group_batch32": ("group", {"batch_size": 32}, "queue"),
+    # Brook-2PL (chop-ordered, deadlock-free; family "brook"). The
+    # deadlock-freedom claim covers transactions GENERATED under the
+    # chop order — a FixedPolicy("brook2pl") run from segment 0 never
+    # stalls, aborts, or pays detection. Switching INTO brook2pl
+    # mid-run is different: in-flight transactions generated under the
+    # previous preset's (un)ordering can already hold locks in a cycle,
+    # and pure brook has NO resolver (no detection walk, no timeouts) —
+    # an inherited cycle would stall the run until the horizon, so
+    # ``run_governed`` REJECTS such switches loudly (see
+    # :func:`switch_safe`). Policies that switch protocols use
+    # `brook_guard` (wait timeout re-armed as the residual resolver;
+    # zero false timeouts on brook-generated waits and recovery from an
+    # inherited cycle are both asserted in tests/test_adaptive.py).
+    # `brook_hold` keeps ordered acquisition but holds to commit
+    # (strict 2PL without deadlocks, for heavy injected-abort mixes
+    # where early readers are wasted work).
+    # guard timeout: 10 ms — an order of magnitude above any legitimate
+    # chop-ordered wait at governed thread counts (T<=128: ~10k ticks of
+    # queued holders), so brook traffic never falsely times out, and
+    # comfortably below governed horizons (fig15: 180k+ ticks), so a
+    # cycle inherited in the EARLY part of a run resolves mid-run.
+    # (mysql's default 500k would outlive the whole horizon and never
+    # fire.) A switch-in later than horizon - 100k ticks can still ride
+    # its stall to the end — deriving the guard from horizon /
+    # n_segments is a ROADMAP follow-on.
+    "brook2pl": ("brook2pl", {}, "brook"),
+    "brook_hold": ("brook2pl", {"per_op_release": False}, "brook"),
+    "brook_guard": ("brook2pl", {"wait_timeout": 100_000,
+                                 "commit_wait_timeout": 100_000}, "brook"),
 }
 
 DEFAULT_ARMS = ("o2", "group", "mysql")
@@ -62,6 +91,21 @@ def preset_params(name: str) -> ProtocolParams:
 
 def preset_family(name: str) -> str:
     return PRESETS[name][2]
+
+
+def switch_safe(name: str) -> bool:
+    """Can a governed run adopt this preset MID-RUN (segment k > 0)?
+
+    A preset with no dynamic deadlock resolver (no detection walk, no
+    wait timeout) relies on every in-flight transaction having been
+    generated under its chop order — true from segment 0 or when the
+    previous preset already ordered acquisitions, false after a switch
+    from an unordered preset, where inherited out-of-order holders can
+    cycle unresolvably (DESIGN.md §9.2). Derived from the params, not a
+    hand-list, so knob variants inherit the right answer.
+    """
+    p = preset_params(name)
+    return bool(p.has_detection or p.wait_timeout > 0)
 
 
 # ---------------------------------------------------------------------------

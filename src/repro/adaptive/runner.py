@@ -28,6 +28,7 @@ import time
 from typing import Iterable, Sequence
 
 import jax
+import numpy as np
 
 from repro.core.lock import engine as _engine
 from repro.core.lock.costs import CostModel
@@ -39,7 +40,7 @@ from repro.sweep.runner import (BucketInfo, SweepResults, MIN_T_BUCKET,
                                 _auto_chunk, _pow2ceil, _take,
                                 run_packed_segment)
 
-from .governor import Policy, SegmentRecord, preset_params
+from .governor import Policy, SegmentRecord, preset_params, switch_safe
 
 
 @dataclasses.dataclass(frozen=True)
@@ -143,6 +144,23 @@ def run_governed(cells: Iterable[GovernorCell], *, horizon: int,
                   for lo in range(0, G, max(chunk_size, 1))]
         gpacked: list = [None] * len(groups)
 
+        # Mid-run safety for resolver-free presets (pure brook2pl /
+        # brook_hold: no detection walk, no wait timeout — DESIGN §9.2).
+        # Such a preset is deadlock-free only while EVERY in-flight
+        # transaction follows its current chop order, which holds iff
+        # (a) every preceding segment ran an ordered_acquire preset
+        # (a single unordered segment can leave cycle-capable holders
+        # that outlive many boundaries — a one-segment brook_guard hop
+        # does NOT launder them, its timeout may not have fired yet) and
+        # (b) the chop rank table has been stable since segment 0
+        # (drift that rotates acq_rank, e.g. hot_migration, makes new
+        # txns disagree with in-flight ones about the order — measured:
+        # a fixed brook_hold cell under hot_migration flatlines to zero
+        # commits with no resolver). Violations fail loudly here.
+        all_ordered = [True] * G
+        rank_stable = [True] * G
+        prev_rank: list = [None] * G
+
         for k in range(n_segments):
             until = horizon * (k + 1) // n_segments
             presets = ([c.policy.decide(k, h)
@@ -152,6 +170,31 @@ def run_governed(cells: Iterable[GovernorCell], *, horizon: int,
                 _cell_config(c, p, k, horizon),
                 pad_threads=pad_t, pad_len=pad_l)[1]
                 for c, p in zip(bcells, presets)]
+            ranks = [np.asarray(dp.wl.acq_rank) for dp in dps]
+            for j, (c, p) in enumerate(zip(bcells, presets)):
+                if k:
+                    rank_stable[j] &= np.array_equal(prev_rank[j],
+                                                     ranks[j])
+                if k and not switch_safe(p):
+                    if not all_ordered[j]:
+                        raise ValueError(
+                            f"cell {c.name!r}: policy {c.policy.name!r} "
+                            f"runs resolver-free preset {p!r} at segment "
+                            f"{k} after an unordered-preset segment; "
+                            "inherited out-of-order locks can cycle "
+                            "unresolvably — use 'brook_guard' instead "
+                            "(DESIGN.md §9.2)")
+                    if not rank_stable[j]:
+                        raise ValueError(
+                            f"cell {c.name!r}: drift "
+                            f"{c.drift.name!r} rotated the chop rank "
+                            f"table by segment {k} while resolver-free "
+                            f"preset {p!r} is active; in-flight and new "
+                            "transactions would disagree about the lock "
+                            "order — use 'brook_guard' under rank-"
+                            "rotating drift (DESIGN.md §9.2)")
+                all_ordered[j] &= bool(preset_params(p).ordered_acquire)
+            prev_rank = ranks
             outs: list = [None] * G
             for gi, grp in enumerate(groups):
                 gpacked[gi], snaps, w = run_packed_segment(

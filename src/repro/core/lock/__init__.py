@@ -1,4 +1,6 @@
 """Concurrency-control engine: the paper's faithful reproduction layer."""
+from . import chop
+from .chop import ChopPlan
 from .costs import CostModel, ProtocolParams, protocol_params, PROTOCOLS
 from .workload import (WorkloadSpec, DynWorkload, dyn_workload, zipf_cdf,
                        zipf_cdf_table, DriftSchedule, DRIFT_KINDS,
@@ -13,6 +15,7 @@ from .metrics import (SimResult, extract, extract_segment, delta_globals,
 from .aria import simulate_aria, extract_aria
 
 __all__ = [
+    "chop", "ChopPlan",
     "CostModel", "ProtocolParams", "protocol_params", "PROTOCOLS",
     "WorkloadSpec", "DynWorkload", "dyn_workload", "zipf_cdf",
     "zipf_cdf_table", "DriftSchedule", "DRIFT_KINDS", "stationary",

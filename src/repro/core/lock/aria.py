@@ -142,7 +142,8 @@ def _make_batch(stat: StaticShape, dp: AriaDyn):
     slot_ok = jnp.arange(L, dtype=I32)[None, :] < dp.wl.txn_len
 
     def batch(s: AriaState) -> AriaState:
-        keys, iswr, dup, _ = gen_txn_dyn(stat.kind, R, L, dp.wl, tids, s.txn)
+        keys, iswr, dup, _, _ = gen_txn_dyn(stat.kind, R, L, dp.wl, tids,
+                                            s.txn)
         lane = jnp.broadcast_to(tids[:, None], (T, L))
         live = active[:, None] & slot_ok
         iswr = iswr & live

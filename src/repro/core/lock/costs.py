@@ -23,7 +23,8 @@ from __future__ import annotations
 
 import dataclasses
 
-PROTOCOLS = ("mysql", "o1", "o2", "group", "bamboo")  # + "aria" (own module)
+PROTOCOLS = ("mysql", "o1", "o2", "group", "bamboo",
+             "brook2pl")  # + "aria" (own module)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,6 +45,9 @@ class ProtocolParams:
     batch_size: int = 10         # group batch size (B)
     hot_threshold: int = 32      # §4.1 promotion threshold
     proactive_abort: bool = False  # §4.5 hot+non-hot proactive rollback
+    # --- Brook-2PL (chop.py static analysis; deadlock-free 2PL) ---
+    ordered_acquire: bool = False  # acquire rows in canonical chop order
+    per_op_release: bool = False   # retire tickets at their last-use op
     # --- timeouts (ticks); <=0 disables ---
     wait_timeout: int = 500_000      # 50ms
     commit_wait_timeout: int = 500_000
@@ -78,6 +82,15 @@ def protocol_params(name: str, **over) -> ProtocolParams:
                       group_commit=True, proactive_abort=True),
         "bamboo": dict(lock_base=8, dd_coeff=1.0, has_detection=True,
                        early_all=True, early_release=True),
+        # Brook-2PL: chop-ordered acquisition makes waits-for cycles
+        # structurally impossible, so BOTH dynamic deadlock resolvers are
+        # off — no detection walk (dd_coeff 0) and no lock-wait timeouts
+        # (0 disables; a timeout would be the residual deadlock resolver
+        # and its absence is the protocol's claim). Per-op release
+        # shrinks hold intervals to [acquire, last-use].
+        "brook2pl": dict(lock_base=4, dd_coeff=0.0, has_detection=False,
+                         ordered_acquire=True, per_op_release=True,
+                         wait_timeout=0, commit_wait_timeout=0),
     }[name]
     base.update(over)
     return ProtocolParams(name=name, **base)

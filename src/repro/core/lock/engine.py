@@ -1,10 +1,20 @@
 """Vectorized discrete-time concurrency-control engine (the paper's core).
 
 The engine simulates T database worker threads executing transactions over R
-rows under one of five locking protocols (MySQL-2PL, O1 lightweight, O2
-queue locking, TXSQL group locking, Bamboo), tick-accurately, entirely as a
-compiled JAX program (``lax.while_loop`` over simulated time; all state in
-arrays). Aria lives in ``aria.py`` (its batch structure needs no tick loop).
+rows under one of six locking protocols (MySQL-2PL, O1 lightweight, O2
+queue locking, TXSQL group locking, Bamboo, Brook-2PL), tick-accurately,
+entirely as a compiled JAX program (``lax.while_loop`` over simulated time;
+all state in arrays). Aria lives in ``aria.py`` (its batch structure needs
+no tick loop). Brook-2PL ("Tolerating High Contention Workloads with A
+Deadlock-Free Two-Phase Locking Protocol", Habibi et al., arXiv:2508.18576)
+is the statically-analysed member: ``chop.py`` derives a canonical
+lock-acquisition order and per-op release points from the workload's
+transaction templates, and the engine consumes them through two masked
+protocol branches — ``ordered_acquire`` (tickets taken in canonical row
+order, making waits-for cycles structurally impossible: no detection walk,
+no timeouts, no deadlock rollbacks) and ``per_op_release`` (a ticket
+retires from the commit-order dependency at its key's last-use op, with
+the ``cc``/``top`` cascade machinery still guarding dirty reads).
 
 Modeling choices (see DESIGN.md §2.1):
 
@@ -114,6 +124,8 @@ class DynParams(NamedTuple):
     batch_size: jnp.ndarray
     hot_threshold: jnp.ndarray
     proactive_abort: jnp.ndarray
+    ordered_acquire: jnp.ndarray
+    per_op_release: jnp.ndarray
     wait_timeout: jnp.ndarray
     commit_wait_timeout: jnp.ndarray
     # --- costs ---
@@ -155,6 +167,8 @@ def split_config(cfg: EngineConfig, pad_threads: int | None = None,
         group_commit=b(p.group_commit), dynamic_batch=b(p.dynamic_batch),
         batch_size=i32(p.batch_size), hot_threshold=i32(p.hot_threshold),
         proactive_abort=b(p.proactive_abort),
+        ordered_acquire=b(p.ordered_acquire),
+        per_op_release=b(p.per_op_release),
         wait_timeout=i32(p.wait_timeout),
         commit_wait_timeout=i32(p.commit_wait_timeout),
         op_exec=i32(c.op_exec), read_exec=i32(c.read_exec),
@@ -188,6 +202,8 @@ class Threads(NamedTuple):
     applied: jnp.ndarray    # (T, L) bool
     early: jnp.ndarray      # (T, L) bool: early-release semantics at apply
     committing: jnp.ndarray  # (T, L) bool: entered the commit queue
+    lastu: jnp.ndarray      # (T, L) bool: slot is its key's last use (chop)
+    released: jnp.ndarray   # (T, L) bool: ticket retired at its release pt
     nops: jnp.ndarray       # (T,)
 
 
@@ -214,6 +230,7 @@ class Globals(NamedTuple):
     busy_ticks: jnp.ndarray     # f32 (executing/committing thread-ticks)
     lat_sum: jnp.ndarray        # f32
     hist: jnp.ndarray           # (N_HIST,) i32 latency histogram
+    dd_ticks: jnp.ndarray       # deadlock-detection ticks paid on grants
     iters: jnp.ndarray
 
 
@@ -285,7 +302,11 @@ def _derive(stat: StaticShape, dp: DynParams, th: Threads,
     # Commit cursor: with group commit, entering the commit queue releases
     # the *order* dependency (the batch syncs together, Fig. 5c); without
     # it, the dependency holds until the commit completes (slot cleared).
-    cc_block = appl & (~th.committing | ~dp.group_commit)
+    # Brook per-op release retires a slot from the commit order at its
+    # last-use op (th.released) — successors may commit ahead of the
+    # releaser; the slot stays live/early so the cascade guard still sees
+    # it if the releaser is nonetheless forced to abort.
+    cc_block = appl & (~th.committing | ~dp.group_commit) & ~th.released
     cc = _seg_min(th.ticket, keyf, R, cc_block)
     cc = jnp.where(cc == INF, us, cc)
     top = _seg_max(th.ticket, keyf, R, appl & ~th.committing)
@@ -456,7 +477,9 @@ def _make_step(stat: StaticShape, dp: DynParams, until=None):
             wait_ticks=g.wait_ticks
             + jnp.sum(jnp.where(grantable, (now - th.wstart), 0)).astype(F32),
             lock_ops=g.lock_ops
-            + jnp.sum(jnp.where(grantable & (~hotq | is_leader_grant), 1, 0)))
+            + jnp.sum(jnp.where(grantable & (~hotq | is_leader_grant), 1, 0)),
+            dd_ticks=g.dd_ticks
+            + jnp.sum(jnp.where(grantable & ~hotq, dd, 0)))
 
         upd_new = _seg_max(jnp.ones_like(key_w), key_w, R,
                            grantable) > 0
@@ -486,7 +509,10 @@ def _make_step(stat: StaticShape, dp: DynParams, until=None):
         is_cw = (th.phase == CWAIT) & ~th.forced
         live = th.ticket >= 0
         cc_at = d2.cc[th.keys]
-        order_ok = jnp.where(live & th.applied & th.early,
+        # released slots are OUT of the commit order entirely (brook):
+        # the releaser itself must not wait for cc to reach a ticket that
+        # cc now skips — only early-but-unreleased slots order commits.
+        order_ok = jnp.where(live & th.applied & th.early & ~th.released,
                              cc_at == th.ticket, True).all(axis=1)
         no_casc = jnp.where(live, rows.casc[th.keys] == INF, True).all(axis=1)
         lead_open = (jnp.where(live & th.applied & th.early,
@@ -602,6 +628,27 @@ def _make_step(stat: StaticShape, dp: DynParams, until=None):
         early = th.early.at[tids, opc].set(
             jnp.where(eff_wr, early_now, cur(th.early, th.op)))
         th = th._replace(applied=applied, early=early)
+        # Brook-2PL per-op release (chop.py): when an op completes at its
+        # key's LAST use, the key's ticket retires — `early` opens the
+        # grant path and `released` drops the commit-order dependency, so
+        # successors lock, update, AND commit ahead of the releaser.
+        # Gated on ~willab: a txn that will abort at its commit point
+        # keeps strict-2PL holds, so no dirty read can ever involve an
+        # aborting brook txn — deadlock-free AND cascade-free. If a
+        # released txn is nonetheless forced (brook_guard timeouts after
+        # a governed switch-in), its early slots open a cascade on the
+        # row, which freezes further grants AND commits there (no_casc)
+        # until the dependents drain via their own timeouts; successor
+        # writes are commutative increments, so the counter invariant
+        # survives the out-of-order revert (same argument as
+        # rb_turn_timeout in costs.py).
+        rel_now = (e_done & cur(th.lastu, th.op) & dp.per_op_release
+                   & ~th.forced & ~th.willab)
+        rel_slot = ((th.keys == cur_key[:, None]) & (th.ticket >= 0)
+                    & rel_now[:, None])
+        th = th._replace(
+            released=th.released | rel_slot,
+            early=th.early | (rel_slot & th.applied))
         nop = th.op + jnp.where(e_done, 1, 0)
         txn_done = e_done & (nop >= th.nops)
         th = th._replace(op=nop)
@@ -644,7 +691,8 @@ def _make_step(stat: StaticShape, dp: DynParams, until=None):
             ticket=jnp.where(clear, NOTK, th.ticket),
             applied=jnp.where(clear, False, th.applied),
             early=jnp.where(clear, False, th.early),
-            committing=jnp.where(clear, False, th.committing))
+            committing=jnp.where(clear, False, th.committing),
+            released=jnp.where(clear, False, th.released))
 
         # 6d. BACKOFF done -> START; COMMIT/RBACK -> next
         # backoff is jittered per (thread, txn) to break retry lockstep
@@ -684,14 +732,16 @@ def _make_step(stat: StaticShape, dp: DynParams, until=None):
             phase=jnp.where(early_t, ARRIVE, th.phase),
             work=jnp.where(early_t, arr - now, th.work))
         st = st & ~early_t
-        keys, iswr, dup, nops = gen_txn_dyn(stat.kind, R, L, dp.wl,
-                                            tids, th.txn)
+        keys, iswr, dup, lastu, nops = gen_txn_dyn(
+            stat.kind, R, L, dp.wl, tids, th.txn,
+            acq_order=dp.ordered_acquire)
         wab = will_abort_dyn(dp.wl.seed, dp.p_abort, tids, th.txn)
         sel = st[:, None]
         th = th._replace(
             keys=jnp.where(sel, keys, th.keys),
             iswr=jnp.where(sel, iswr, th.iswr),
             dup=jnp.where(sel, dup, th.dup),
+            lastu=jnp.where(sel, lastu, th.lastu),
             nops=jnp.where(st, nops, th.nops),
             willab=jnp.where(st, wab, th.willab),
             tstart=jnp.where(st & ~th.retry, now, th.tstart),
@@ -786,6 +836,8 @@ def init_state_dyn(stat: StaticShape, dp: DynParams) -> SimState:
         applied=jnp.zeros((T, L), bool),
         early=jnp.zeros((T, L), bool),
         committing=jnp.zeros((T, L), bool),
+        lastu=jnp.zeros((T, L), bool),
+        released=jnp.zeros((T, L), bool),
         nops=jnp.full((T,), L, I32),
     )
     rows = Rows(
@@ -810,6 +862,7 @@ def init_state_dyn(stat: StaticShape, dp: DynParams) -> SimState:
         busy_ticks=jnp.asarray(0.0, F32),
         lat_sum=jnp.asarray(0.0, F32),
         hist=jnp.zeros((N_HIST,), I32),
+        dd_ticks=jnp.asarray(0, I32),
         iters=jnp.asarray(0, I32),
     )
     return SimState(th, rows, g)

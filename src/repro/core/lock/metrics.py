@@ -39,6 +39,10 @@ class SimResult:
     cpu_util: float             # busy thread-ticks / (T * ticks)
     abort_rate: float
     iters: int
+    # deadlock-detection ticks paid on the grant path (0 for detection-
+    # free protocols; brook2pl's acceptance metric). Defaulted so pre-PR5
+    # Globals snapshots (no dd_ticks leaf) still extract.
+    dd_ticks: int = 0
 
     def row(self) -> str:
         return (f"{self.protocol},{self.n_threads},{self.tps:.0f},"
@@ -90,6 +94,7 @@ def extract_globals(protocol: str, n_threads: int, g) -> SimResult:
         cpu_util=float(g.busy_ticks) / (n_threads * now),
         abort_rate=aborts / max(commits + aborts, 1),
         iters=int(g.iters),
+        dd_ticks=int(getattr(g, "dd_ticks", 0)),
     )
 
 

@@ -13,6 +13,9 @@ Chains (ticks/commit at saturation, T threads, see costs.py semantics):
              the serial path; commits pipeline)
   group    : grant_cost + op, amortized lock_base per batch; commits
              batch off-path (group commit)
+  brook2pl : lock_base + op (no detection on the grant path; per-op
+             release retires the hot ticket at its last use, so the
+             commit — like bamboo's — pipelines off the serial chain)
   serial(1): lock_base + op + commit (queue length 0)
 """
 from __future__ import annotations
@@ -38,6 +41,9 @@ def predicted_tps(proto: str, n_threads: int, costs: CostModel,
     elif proto == "group":
         chain = p.grant_cost + c.op_exec + p.lock_base / max(
             p.batch_size, 1)
+    elif proto == "brook2pl":
+        chain = (p.lock_base + c.op_exec if p.per_op_release
+                 else p.lock_base + c.op_exec + commit)
     else:  # pragma: no cover
         raise ValueError(proto)
     return TICKS_PER_SEC / chain

@@ -37,6 +37,8 @@ from typing import NamedTuple, Optional
 import numpy as np
 import jax.numpy as jnp
 
+from . import chop
+
 I32 = jnp.int32
 F32 = jnp.float32
 
@@ -77,6 +79,7 @@ class DynWorkload(NamedTuple):
     reads_lock: jnp.ndarray     # () bool
     hot_base: jnp.ndarray       # () i32 hot-set anchor (0 = classic layout)
     zcdf: jnp.ndarray           # (R,) f32 Zipf CDF (always present)
+    acq_rank: jnp.ndarray       # (R,) i32 chop lock-acquisition rank
 
 
 def dyn_workload(spec: WorkloadSpec) -> DynWorkload:
@@ -90,6 +93,7 @@ def dyn_workload(spec: WorkloadSpec) -> DynWorkload:
         reads_lock=jnp.asarray(spec.reads_lock, bool),
         hot_base=jnp.asarray(spec.hot_base, I32),
         zcdf=zipf_cdf_table(spec.n_rows, spec.zipf_s),
+        acq_rank=chop.acquisition_rank(spec),
     )
 
 
@@ -119,9 +123,12 @@ def _uniform01(h: jnp.ndarray) -> jnp.ndarray:
 
 
 def zipf_cdf(n: int, s: float) -> np.ndarray:
-    """CDF of a Zipf(s) distribution over keys [0, n) (numpy, float64)."""
-    ranks = np.arange(1, n + 1, dtype=np.float64)
-    w = ranks ** (-float(s)) if s > 0 else np.ones_like(ranks)
+    """CDF of a Zipf(s) distribution over keys [0, n) (numpy, float64).
+
+    Weights come from ``chop.zipf_weights`` — the single definition the
+    chop heat model also ranks by, so the acquisition order can never
+    diverge from the keys actually drawn."""
+    w = chop.zipf_weights(n, s)
     cdf = np.cumsum(w / w.sum())
     cdf[-1] = 1.0
     return cdf.astype(np.float32)
@@ -142,7 +149,8 @@ def zipf_cdf_table(n: int, s: float) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 
 def gen_txn_dyn(kind: str, n_rows: int, L: int, dw: DynWorkload,
-                thread_ids: jnp.ndarray, txn_ctr: jnp.ndarray):
+                thread_ids: jnp.ndarray, txn_ctr: jnp.ndarray,
+                acq_order: jnp.ndarray | None = None):
     """Generate transaction programs for every thread (traceable params).
 
     Args:
@@ -153,12 +161,20 @@ def gen_txn_dyn(kind: str, n_rows: int, L: int, dw: DynWorkload,
       dw: traceable workload parameters.
       thread_ids: (T,) int32.
       txn_ctr: (T,) int32 per-thread transaction counter.
+      acq_order: optional traced bool (``DynParams.ordered_acquire``):
+         re-sort each txn's active ops into the canonical chop rank
+         order (``dw.acq_rank``) BEFORE the dup/re-entrancy analysis, so
+         Brook-2PL lanes acquire rows in one global order. False (or
+         None) leaves programs bit-identical to the classic layout.
 
     Returns:
       keys:  (T, L) int32 row keys.
       iswr:  (T, L) bool write flags.
       dup:   (T, L) bool — key already appears earlier in the same txn
              (re-entrant access: no new ticket needed).
+      lastu: (T, L) bool — slot is the LAST active slot touching its key
+             (the per-op release point, chop.py §9.3; shares the dup
+             analysis's pairwise key-equality tensor).
       nops:  (T,) int32 — ops in this txn (== dw.txn_len).
     """
     T = thread_ids.shape[0]
@@ -230,14 +246,26 @@ def gen_txn_dyn(kind: str, n_rows: int, L: int, dw: DynWorkload,
 
     iswr = iswr | dw.reads_lock
 
+    if acq_order is not None:
+        # Brook-2PL chop ordering (chop.py): canonical per-key rank,
+        # traced select so one compiled step serves ordered + classic.
+        keys, iswr = chop.apply_acquisition_order(
+            dw.acq_rank, keys, iswr, dw.txn_len, acq_order)
+
     # dup[i] = key i seen at an earlier slot (re-entrant lock).
     eq = keys[:, :, None] == keys[:, None, :]            # (T, L, L)
     earlier = jnp.tril(jnp.ones((L, L), dtype=bool), k=-1)[None]
     dup = jnp.any(eq & earlier & iswr[:, None, :], axis=2) & iswr
     # A read slot never takes a ticket; only writes matter for dup.
 
+    # lastu[i] = no LATER active slot touches key i (the per-op release
+    # point, == chop.last_use; derived here to reuse the eq tensor).
+    active = slot < dw.txn_len                           # (1, L)
+    later = jnp.triu(jnp.ones((L, L), dtype=bool), k=1)[None]
+    lastu = active & ~jnp.any(eq & later & active[:, None, :], axis=2)
+
     nops = jnp.broadcast_to(dw.txn_len, (T,)).astype(I32)
-    return keys.astype(I32), iswr, dup, nops
+    return keys.astype(I32), iswr, dup, lastu, nops
 
 
 def gen_txn(spec: WorkloadSpec, thread_ids: jnp.ndarray, txn_ctr: jnp.ndarray):

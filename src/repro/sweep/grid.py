@@ -20,7 +20,7 @@ from typing import Any, Iterable, Mapping, Sequence
 
 from repro.core.lock import CostModel, WorkloadSpec
 
-PROTOCOLS_ALL = ("mysql", "o1", "o2", "group", "bamboo", "aria")
+PROTOCOLS_ALL = ("mysql", "o1", "o2", "group", "bamboo", "brook2pl", "aria")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -371,7 +371,10 @@ def _run_bucket_compact(family: str, stat, bpts: list[SweepPoint],
     sequence, so results — including ``Globals.iters`` — stay bitwise
     equal to single-shot runs); for Aria, whose every loop iteration
     advances ``now`` by exactly ``batch_ticks``, the equivalent per-lane
-    pause target is ``now + slice * batch_ticks``.
+    pause target is ``now + slice * batch_ticks``. Only the first call's
+    budget comes from the analytic estimate; subsequent budgets re-derive
+    from the observed per-call progress (see the loop tail) unless
+    ``slice_iters`` pins them.
     """
     queue: list[_Lane] = []
     ests = sorted(((_est_iters(p), i) for i, p in enumerate(bpts)),
@@ -392,9 +395,12 @@ def _run_bucket_compact(family: str, stat, bpts: list[SweepPoint],
     # Budget scale: ~1/DEFAULT_SLICES of the densest lane's estimated
     # iterations (est tracks commits ~ iters/2; the sort above puts it at
     # the head). A misestimate only changes the call count, never any
-    # result.
+    # result — and only the FIRST call trusts the analytic estimate: from
+    # then on the budget re-derives from observed execution (below)
+    # unless the caller pinned it with ``slice_iters``.
     est_max = max(ests[0][0], 1.0)
     budget = slice_iters or max(256, int(2.0 * est_max / DEFAULT_SLICES))
+    adaptive = slice_iters is None
 
     active: list[_Lane] = []
     n_calls = n_repacks = lane_iters = 0
@@ -519,6 +525,27 @@ def _run_bucket_compact(family: str, stat, bpts: list[SweepPoint],
         repack_log.append((n, g_run, max_d))
         if retired and active:
             n_repacks += 1
+        if adaptive and active:
+            # Adaptive slice budget (PR4 follow-on b): re-estimate from
+            # the OBSERVED call instead of re-trusting the analytic
+            # estimate. Each survivor's remaining iterations extrapolate
+            # linearly in sim-time from its observed totals; the densest
+            # survivor re-sets the budget at 1/DEFAULT_SLICES of its
+            # projected remainder, floored at this call's max_delta_iters
+            # so the budget never drops below what one call was just
+            # observed to spend (shrinking only adds dispatches). A lane
+            # the estimate undershot 100x now costs O(DEFAULT_SLICES)
+            # extra calls, not 100 fixed-size slices; results never
+            # depend on the budget (pause/resume is bit-exact).
+            rem = 0.0
+            for ln in active:
+                if family == "engine":
+                    left = max(_engine.stop_ticks(ln.cfg) - ln.now, 0)
+                    rem = max(rem, ln.iters * left / max(ln.now, 1))
+                else:
+                    rem = max(rem, (ln.p.horizon - ln.now)
+                              / max(ln.bt, 1))
+            budget = max(256, max_d, int(rem / DEFAULT_SLICES))
     return n_calls, n_repacks, lane_iters, tuple(repack_log)
 
 
@@ -626,6 +653,10 @@ def run_sweep(points: Iterable[SweepPoint], *, chunk_size: int | None = None,
                 f"{p.protocol!r} (known: {', '.join(KNOWN_PROTOCOLS)})")
         if p.protocol == "aria":
             _check_aria_point(p)
+    if slice_iters is not None and slice_iters <= 0:
+        raise ValueError(f"slice_iters={slice_iters}: must be a positive "
+                         "iteration budget (or None for the adaptive "
+                         "default)")
     chunk_size = chunk_size or _auto_chunk()
     if compact is None:
         compact = chunk_size > 1

@@ -13,8 +13,8 @@ import numpy as np
 import pytest
 
 from repro.adaptive import (DEFAULT_ARMS, EpsilonGreedyPolicy, FixedPolicy,
-                            GovernorCell, QueueRulePolicy, SegmentRecord,
-                            preset_timeline, run_governed)
+                            GovernorCell, Policy, QueueRulePolicy,
+                            SegmentRecord, preset_timeline, run_governed)
 from repro.core.lock import (CostModel, EngineConfig, WorkloadSpec,
                              extract, flash_crowd, hot_migration,
                              protocol_params, simulate, skew_ramp,
@@ -183,9 +183,9 @@ class TestDriftSchedules:
         assert anchors == [0, 0, 256, 256, 512, 512, 768, 768]
         tids = jnp.arange(4, dtype=jnp.int32)
         ctr = jnp.zeros(4, jnp.int32)
-        keys, _, _, _ = gen_txn(ds.spec(2), tids, ctr)
+        keys, _, _, _, _ = gen_txn(ds.spec(2), tids, ctr)
         assert (np.asarray(keys[:, 0]) == 256).all()   # op 0 hits the site
-        keys0, _, _, _ = gen_txn(ds.spec(0), tids, ctr)
+        keys0, _, _, _, _ = gen_txn(ds.spec(0), tids, ctr)
         assert (np.asarray(keys0[:, 0]) == 0).all()
 
     def test_skew_ramp_endpoints(self):
@@ -400,3 +400,110 @@ class TestStoreV2:
             json.dump({"schema": "something/else"}, f)
         with pytest.raises(ValueError):
             load_results(path)
+
+
+class TestBrookSwitchIn:
+    """Switching INTO brook2pl mid-run (governor.py preset-table note):
+    in-flight transactions generated under the previous preset can hold
+    locks out of chop order and form a cycle pure brook2pl can never
+    resolve (no detection, no timeouts). run_governed rejects such
+    switches loudly (switch_safe); `brook_guard` re-arms the wait
+    timeout as the residual resolver and must recover."""
+
+    class _Switch(Policy):
+        def __init__(self, first, then):
+            self.first, self.then = first, then
+            self.name = f"switch:{first}->{then}"
+
+        def decide(self, k, history):
+            return self.first if k == 0 else self.then
+
+    W = WorkloadSpec(kind="zipf", zipf_s=1.1, txn_len=4, n_rows=256)
+
+    def _run(self, then, n_seg=6):
+        cell = GovernorCell(f"swt_{then}", self._Switch("mysql", then),
+                            stationary(self.W, n_seg), 64)
+        return run_governed([cell], horizon=240_000, n_segments=n_seg)
+
+    def test_pure_brook_switch_in_rejected_loudly(self):
+        """An unresolvable inherited stall must not be a silent flatline:
+        the runner refuses the switch and names the safe preset."""
+        from repro.adaptive import switch_safe
+        assert not switch_safe("brook2pl")
+        assert not switch_safe("brook_hold")
+        assert switch_safe("brook_guard") and switch_safe("mysql")
+        with pytest.raises(ValueError, match="brook_guard"):
+            self._run("brook2pl")
+
+    def test_brook_to_brook_switches_allowed(self):
+        """Chop-ordered in-flight txns make resolver-free targets safe:
+        brook_guard -> brook2pl must NOT be rejected (same acquisition
+        order, nothing to inherit a cycle from)."""
+        cell = GovernorCell("swt_gp", self._Switch("brook_guard",
+                                                   "brook2pl"),
+                            stationary(self.W, 4), 64)
+        res = run_governed([cell], horizon=120_000, n_segments=4)
+        assert res["swt_gp"].forced_aborts == 0
+        assert res["swt_gp"].commits > 0
+
+    def test_brook_guard_switch_in_recovers(self):
+        """The guarded variant times the inherited cycle out and then
+        runs deadlock-free brook traffic for the rest of the horizon."""
+        res = self._run("brook_guard")
+        commits = [s["commits"] for s in res.segments["swt_brook_guard"]]
+        assert sum(commits[2:]) > 0, commits
+        assert commits[-1] > 0, commits
+
+    def test_two_hop_guard_bypass_rejected(self):
+        """mysql -> brook_guard -> brook2pl: a one-segment guard hop
+        does not launder unordered-era locks (its timeout may not have
+        fired within the segment) — resolver-free presets require an
+        ordered history all the way back to segment 0."""
+        class _TwoHop(Policy):
+            name = "twohop"
+
+            def decide(self, k, history):
+                return ("mysql", "brook_guard", "brook2pl")[min(k, 2)]
+
+        cell = GovernorCell("swt_2hop", _TwoHop(), stationary(self.W, 4),
+                            64)
+        with pytest.raises(ValueError, match="unordered-preset"):
+            run_governed([cell], horizon=120_000, n_segments=4)
+
+    def test_rank_rotating_drift_rejected_for_pure_brook(self):
+        """hot_migration rotates acq_rank between segments: in-flight
+        and new transactions would disagree about the lock order with no
+        resolver (measured: permanent flatline) — must raise instead,
+        while brook_guard rides the same drift fine."""
+        drift = hot_migration(self.W, 6, n_sites=2, period=1)
+        cell = GovernorCell("mig_brook", FixedPolicy("brook2pl"), drift,
+                            64)
+        with pytest.raises(ValueError, match="rank"):
+            run_governed([cell], horizon=120_000, n_segments=6)
+        cell2 = GovernorCell("mig_guard", FixedPolicy("brook_guard"),
+                             drift, 64)
+        res = run_governed([cell2], horizon=120_000, n_segments=6)
+        assert res["mig_guard"].commits > 0
+
+    def test_stable_rank_drift_allowed_for_pure_brook(self):
+        """skew_ramp changes zipf_s but never the key-heat ORDER, so the
+        rank table is stable and fixed brook2pl stays legal and clean."""
+        w = dataclasses.replace(self.W, zipf_s=0.7)
+        drift = skew_ramp(w, 4, lo=0.3, hi=0.9)
+        cell = GovernorCell("ramp_brook", FixedPolicy("brook2pl"), drift,
+                            64)
+        res = run_governed([cell], horizon=120_000, n_segments=4)
+        assert res["ramp_brook"].forced_aborts == 0
+        assert res["ramp_brook"].dd_ticks == 0
+        assert res["ramp_brook"].commits > 0
+
+    def test_fixed_brook_guard_no_false_timeouts(self):
+        """The guard timeout must never fire on brook-generated waits:
+        a brook_guard run from segment 0 pays zero forced aborts (the
+        property the preset comment claims)."""
+        cell = GovernorCell("fx_guard", FixedPolicy("brook_guard"),
+                            stationary(self.W, 6), 64)
+        res = run_governed([cell], horizon=240_000, n_segments=6)
+        assert res["fx_guard"].forced_aborts == 0
+        assert res["fx_guard"].dd_ticks == 0
+        assert res["fx_guard"].commits > 0

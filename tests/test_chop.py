@@ -1,0 +1,175 @@
+"""Unit tests for the transaction-chopping / SLW-order analysis
+(``repro.core.lock.chop``): the acquisition order is a total order over
+the key space for every workload kind, release points are last-use,
+tpcc templates chop into the expected class structure, and the traced
+helpers (op re-sort, per-instance last-use) behave under padding."""
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.lock import WorkloadSpec, chop
+from repro.core.lock.workload import dyn_workload, gen_txn_dyn
+
+I32 = jnp.int32
+
+KINDS = ["hotspot_update", "hotspot_mix", "hotspot_scan", "uniform",
+         "zipf", "fit", "tpcc"]
+
+
+def spec(kind, **kw):
+    base = dict(kind=kind, n_rows=64, txn_len=4, write_ratio=0.6,
+                n_hot=2, n_warehouses=2)
+    base.update(kw)
+    return WorkloadSpec(**base)
+
+
+class TestAcquisitionOrder:
+    @pytest.mark.parametrize("kind", KINDS)
+    def test_rank_is_total_order(self, kind):
+        """The per-key rank must be a permutation of [0, R): a TOTAL
+        order — any ties would let two transactions acquire a tied pair
+        in opposite orders and re-admit waits-for cycles."""
+        r = np.asarray(chop.acquisition_rank(spec(kind)))
+        assert r.dtype == np.int32
+        assert sorted(r.tolist()) == list(range(64))
+
+    def test_hot_keys_rank_last(self):
+        """SLW ordering: the hottest class is acquired LAST (shortest
+        hold). zipf key 0 is the hottest; tpcc warehouses beat districts
+        beat stock; hotspot_update's single hot row tops everything."""
+        rz = np.asarray(chop.acquisition_rank(spec("zipf", zipf_s=0.9)))
+        assert rz[0] == 63 and rz[1] == 62        # pmf-descending keys
+        rh = np.asarray(chop.acquisition_rank(spec("hotspot_update")))
+        assert rh[0] == 63
+        rt = np.asarray(chop.acquisition_rank(spec("tpcc")))
+        wh, dist, stock = rt[:2], rt[2:22], rt[22:]
+        assert wh.min() > dist.max() > stock.max()
+
+    def test_fit_rotation_only_moves_the_hot_window(self):
+        """fit's record inserts draw UNROTATED from [n_hot, R); only the
+        hot-account window follows hot_base (mirrors gen_txn_dyn). The
+        migrated window must rank last wherever it lands, and the vacated
+        original window (now never accessed) coldest."""
+        s = spec("fit", n_rows=64, n_hot=4, hot_base=16)
+        r = np.asarray(chop.acquisition_rank(s))
+        assert set(r[16:20]) == {60, 61, 62, 63}    # migrated hot window
+        assert set(r[0:4]) == {0, 1, 2, 3}          # vacated: heat 0
+
+    def test_rank_follows_hot_base_rotation(self):
+        """Drift schedules relocate the hot set; the rank table must
+        follow it (it ships per-segment like the Zipf CDF)."""
+        r0 = np.asarray(chop.acquisition_rank(spec("zipf", zipf_s=0.9)))
+        r7 = np.asarray(chop.acquisition_rank(
+            spec("zipf", zipf_s=0.9, hot_base=7)))
+        assert r7[7] == 63 and (np.roll(r7, -7) == r0).all()
+
+    @pytest.mark.parametrize("kind", KINDS)
+    def test_class_order_ascends_in_heat(self, kind):
+        plan = chop.chop(spec(kind))
+        heats = {c.name: c.heat for c in plan.classes}
+        seq = [heats[n] for n in plan.order]
+        assert seq == sorted(seq)
+        assert set(plan.order) == set(heats)
+
+
+class TestReleasePoints:
+    def test_template_release_is_last_use(self):
+        """Static release point of a slot == last slot of its class."""
+        rel = chop.template_release_points(spec("tpcc", txn_len=6))
+        assert rel == [0, 1, 5, 5, 5, 5]      # wh, dist, stock x4
+        rel1 = chop.template_release_points(spec("hotspot_update"))
+        assert rel1 == [0, 3, 3, 3]           # hot row frees instantly
+        for kind in KINDS:
+            tmpl = chop.txn_template(spec(kind))
+            for t, r in zip(tmpl, chop.template_release_points(spec(kind))):
+                assert r >= t.slot            # release never precedes use
+
+    def test_last_use_exact_per_instance(self):
+        keys = jnp.asarray([[3, 5, 3, 9],
+                            [1, 1, 1, 7]], I32)
+        nops = jnp.asarray([4, 3], I32)       # lane 1: slot 3 padded
+        lu = np.asarray(chop.last_use(keys, nops))
+        assert lu.tolist() == [[False, True, True, True],
+                               [False, False, True, False]]
+
+
+class TestTpccChop:
+    def test_tpcc_template_classes(self):
+        tmpl = chop.txn_template(spec("tpcc", txn_len=5))
+        assert [t.cls for t in tmpl] == \
+            ["warehouse", "district", "stock", "stock", "stock"]
+        assert tmpl[0].wr and tmpl[1].wr      # structural writes
+        plan = chop.chop(spec("tpcc", txn_len=5))
+        assert plan.order == ("stock", "district", "warehouse")
+        # the heaviest SLW edges originate at the warehouse lock: program
+        # order holds the hottest class across every later wait pre-chop
+        # — exactly what acquiring it last eliminates
+        assert plan.slw[0][0] == "warehouse"
+        assert {e[:2] for e in plan.slw} == {
+            ("warehouse", "district"), ("warehouse", "stock"),
+            ("district", "stock")}
+
+    def test_generated_tpcc_txns_acquire_in_rank_order(self):
+        """End-to-end: gen_txn_dyn under ordered_acquire emits programs
+        whose active slots ascend in rank — warehouse last."""
+        s = spec("tpcc", n_rows=256, txn_len=6, n_warehouses=2)
+        dw = dyn_workload(s)
+        tids = jnp.arange(8, dtype=I32)
+        ctr = jnp.zeros(8, I32)
+        keys, iswr, dup, lastu, nops = gen_txn_dyn(
+            "tpcc", 256, 6, dw, tids, ctr,
+            acq_order=jnp.asarray(True))
+        # the inlined lastu (shares dup's eq tensor) == chop.last_use
+        assert (np.asarray(lastu)
+                == np.asarray(chop.last_use(keys, nops))).all()
+        rank = np.asarray(dw.acq_rank)
+        k = np.asarray(keys)
+        for t in range(8):
+            rr = rank[k[t, :int(nops[t])]]
+            # non-decreasing; equal ranks are the same key (re-entrant)
+            assert (np.diff(rr) >= 0).all(), (t, rr)
+        # warehouse (keys 0..1) sits in the LAST active slot
+        assert (k[:, 5] <= 1).all()
+
+    def test_disabled_order_is_identity(self):
+        s = spec("zipf", n_rows=128, zipf_s=0.9)
+        dw = dyn_workload(s)
+        tids = jnp.arange(16, dtype=I32)
+        ctr = jnp.full(16, 3, I32)
+        plain = gen_txn_dyn("zipf", 128, 4, dw, tids, ctr)
+        off = gen_txn_dyn("zipf", 128, 4, dw, tids, ctr,
+                          acq_order=jnp.asarray(False))
+        for a, b in zip(plain, off):
+            assert (np.asarray(a) == np.asarray(b)).all()
+
+    def test_padded_slots_stay_out_of_active_range(self):
+        """L=6 program, txn_len=3: the sort must keep the 3 padded slots
+        after every active one (padding stays bitwise invisible)."""
+        s = spec("zipf", n_rows=128, zipf_s=0.9, txn_len=3)
+        dw = dyn_workload(s)
+        tids = jnp.arange(8, dtype=I32)
+        ctr = jnp.zeros(8, I32)
+        keys6, iswr6, _, _, _ = gen_txn_dyn("zipf", 128, 6, dw, tids, ctr,
+                                            acq_order=jnp.asarray(True))
+        keys3, iswr3, _, _, _ = gen_txn_dyn("zipf", 128, 3, dw, tids, ctr,
+                                            acq_order=jnp.asarray(True))
+        assert (np.asarray(keys6)[:, :3] == np.asarray(keys3)).all()
+        assert (np.asarray(iswr6)[:, :3] == np.asarray(iswr3)).all()
+
+
+class TestPlan:
+    @pytest.mark.parametrize("kind", KINDS)
+    def test_plan_describe_roundtrips(self, kind):
+        plan = chop.chop(spec(kind))
+        text = plan.describe()
+        assert kind in text and "acquire order" in text
+        for name in plan.order:
+            assert name in text
+
+    def test_unknown_kind_raises(self):
+        bogus = dataclasses.replace(spec("zipf"))
+        object.__setattr__(bogus, "kind", "nosuch")
+        with pytest.raises(ValueError, match="nosuch"):
+            chop.row_classes(bogus)

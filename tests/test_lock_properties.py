@@ -22,7 +22,7 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 from repro.core.lock import (EngineConfig, run_sim, WorkloadSpec, CostModel,
                              protocol_params, HALT)
 
-PROTOS = ["mysql", "o1", "o2", "group", "bamboo"]
+PROTOS = ["mysql", "o1", "o2", "group", "bamboo", "brook2pl"]
 
 
 def drain_run(proto, kind, threads, txn_len, p_abort, seed,
@@ -87,5 +87,49 @@ def test_hot_nonhot_mix_no_deadlock_livelock(proto, seed):
     drain — via proactive rollback (group) or detection (bamboo)."""
     s = drain_run(proto, "fit", 64, 2, 0.0, seed, horizon=50_000)
     assert bool((s.th.phase == HALT).all())
+    leftover = int(jnp.abs(s.rows.applied_val - s.rows.committed_val).sum())
+    assert leftover == 0
+
+
+@settings(max_examples=14, deadline=None)
+@given(
+    kind=st.sampled_from(["zipf", "tpcc", "hotspot_update"]),
+    threads=st.sampled_from([4, 32, 96]),
+    txn_len=st.integers(1, 4),
+    seed=st.integers(0, 10_000),
+)
+def test_brook2pl_deadlock_free(kind, threads, txn_len, seed):
+    """Brook-2PL's structural claim: with no injected aborts, chop-ordered
+    acquisition admits NO rollback of any kind — no deadlock victims (no
+    cycles can form), no timeouts (they're disabled because no wait can
+    be indefinite), no cascades (nothing ever aborts) — while the system
+    drains and the serializability counter invariant holds. This is
+    strictly stronger than the generic drain invariants: every dynamic-
+    resolution protocol pays aborts on these workloads at high skew."""
+    s = drain_run("brook2pl", kind, threads, txn_len, 0.0, seed)
+    assert bool((s.th.phase == HALT).all()), "brook2pl failed to drain"
+    assert bool((s.th.ticket < 0).all()), "ticket leak"
+    assert int(s.g.forced_aborts) == 0, "deadlock/cascade rollback"
+    assert int(s.g.user_aborts) == 0
+    assert int(s.g.dd_ticks) == 0, "paid deadlock-detection ticks"
+    leftover = int(jnp.abs(s.rows.applied_val - s.rows.committed_val).sum())
+    assert leftover == 0, f"lost/dirty updates: {leftover}"
+    assert int(s.g.commits) > 0
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    kind=st.sampled_from(["zipf", "tpcc", "hotspot_update"]),
+    seed=st.integers(0, 1000),
+)
+def test_brook2pl_injected_aborts_never_cascade(kind, seed):
+    """Injected commit-point aborts under brook2pl stay singular: a txn
+    that will abort keeps strict-2PL holds (per-op release is gated on
+    ~willab), so no successor ever reads its writes and forced/cascade
+    aborts stay at zero even at p_abort=0.3."""
+    s = drain_run("brook2pl", kind, 48, 3, 0.3, seed)
+    assert bool((s.th.phase == HALT).all())
+    assert int(s.g.user_aborts) > 0      # injection actually exercised
+    assert int(s.g.forced_aborts) == 0, "a brook abort cascaded"
     leftover = int(jnp.abs(s.rows.applied_val - s.rows.committed_val).sum())
     assert leftover == 0

@@ -23,7 +23,7 @@ ZIPF = WorkloadSpec(kind="zipf", txn_len=2, n_rows=256, zipf_s=0.9)
 HORIZON = 25_000
 
 INT_FIELDS = ("commits", "user_aborts", "forced_aborts", "lock_ops",
-              "iters")
+              "iters", "dd_ticks")
 FLOAT_FIELDS = ("tps", "mean_latency_us", "p95_latency_us", "abort_rate",
                 "lock_wait_frac", "cpu_util")
 
@@ -106,9 +106,43 @@ class TestParity:
         """A typo'd protocol must raise up front, not degrade silently
         (the old _est_iters bare-except hid it behind a worse chunking
         order until a cryptic KeyError deep in the bucket loop)."""
-        pts = [point("brook2pl", HOT, 8, horizon=1000, name="b2pl")]
+        pts = [point("br00k2pl", HOT, 8, horizon=1000, name="b2pl")]
         with pytest.raises(ValueError, match="unknown protocol"):
             run_sweep(pts)
+
+    def test_brook2pl_lanes_match_simulate_bitexact(self):
+        """brook2pl is a first-class sweep protocol now (PR 4 made it a
+        ValueError): vmapped lanes — chop-ordered acquisition, per-op
+        release, injected aborts — must equal per-config ``simulate()``
+        bit-for-bit in one compile per shape bucket, with zero deadlock
+        rollbacks and zero detection ticks."""
+        w = dataclasses.replace(ZIPF, n_rows=251)   # unique shape: cold
+        pts = grid(["brook2pl", "mysql"], w, [8, 12], horizon=HORIZON,
+                   p_abort=[0.0, 0.1],
+                   name_fmt="{protocol}_T{n_threads}_p{p_abort}")
+        res = run_sweep(pts, chunk_size=4)
+        assert len(res.buckets) == 1
+        assert res.n_compiles <= 4          # the pow2 width ladder, once
+        for p in pts:
+            r = res[p.name]
+            assert_bitexact(r, reference(p), p.name)
+            if p.protocol == "brook2pl":
+                assert r.forced_aborts == 0 and r.dd_ticks == 0, p.name
+
+    def test_est_iters_covers_brook2pl_without_warning(self):
+        """The analytic model covers the new protocol, so the warn-once
+        fallback must NOT fire on brook2pl sweeps (satellite: the warn
+        path is for protocols that land BEFORE their ref model)."""
+        from repro.sweep import runner as R
+        R._EST_WARNED.clear()
+        pts = grid(["brook2pl"], HOT, [8, 64], horizon=HORIZON)
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            ests = [R._est_iters(p) for p in pts]
+        assert all(e > 0 for e in ests)
+        assert ests[0] > 0 and not w, [str(x.message) for x in w]
+        # denser-thread config never estimates below the single lane
+        assert ests[1] >= ests[0] * 0.99
 
     def test_est_iters_ref_model_gap_warns_once_and_falls_back(self,
                                                                monkeypatch):
@@ -222,6 +256,36 @@ class TestCompaction:
         # the store carries the per-call repack log
         log = res_c.buckets[0].repack_log
         assert log and all(len(rec) == 3 for rec in log)
+
+    def test_adaptive_budget_recovers_from_bad_estimate(self, monkeypatch):
+        """PR4 follow-on (b): with `slice_iters` unset the budget
+        re-derives from the observed per-call progress, so an analytic
+        estimate that's 1000x off costs a handful of re-calibrated calls
+        — not total-iters/256 fixed slices (what `slice_iters=256` pins,
+        standing in for the old static behavior). Parity must hold on
+        every path and mixed-density repack counts must not regress."""
+        from repro.sweep import runner as R
+        w = dataclasses.replace(ZIPF, n_rows=512)
+        mk = lambda pr, t: point(pr, w, t, horizon=120_000,
+                                 name=f"{pr}_T{t}")
+        pts = [mk("o1", 16), mk("mysql", 16), mk("o2", 16),
+               mk("group", 16)]
+        monkeypatch.setattr(R, "_est_iters", lambda p: 1.0)
+        res_static = run_sweep(pts, chunk_size=4, compact=True,
+                               slice_iters=256)
+        res_adapt = run_sweep(pts, chunk_size=4, compact=True)
+        for p in pts:
+            ref = reference(p)
+            assert_bitexact(res_adapt[p.name], ref, p.name)
+            assert_bitexact(res_static[p.name], ref, p.name)
+        calls_a = sum(b.n_chunks for b in res_adapt.buckets)
+        calls_s = sum(b.n_chunks for b in res_static.buckets)
+        assert calls_a < calls_s, (calls_a, calls_s)
+        # compaction still engages: the stalled detection-free lanes
+        # retire early and the pack repacks down, adaptive or not
+        assert res_adapt.n_repacks >= 1
+        # re-deriving the budget must not blow up the lockstep cost
+        assert res_adapt.lane_iters <= int(1.25 * res_static.lane_iters)
 
 
 SUB_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
