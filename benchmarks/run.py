@@ -50,14 +50,15 @@ def main() -> None:
     from . import (common, compaction_bench, fig02_motivation,
                    fig06_ablation, fig07_mix, fig08_scalability, fig09_sync,
                    fig10_abort_skew, fig12_tpcc, fig13_batch, fig14_recovery,
-                   fig15_adaptive, fig16_brook, kernel_bench, roofline_table)
+                   fig15_adaptive, fig16_brook, fig17_serving, kernel_bench,
+                   roofline_table)
     modules = {
         "fig02": fig02_motivation, "fig06": fig06_ablation,
         "fig07": fig07_mix, "fig08": fig08_scalability,
         "fig09": fig09_sync, "fig10": fig10_abort_skew,
         "fig12": fig12_tpcc, "fig13": fig13_batch,
         "fig14": fig14_recovery, "fig15": fig15_adaptive,
-        "fig16": fig16_brook,
+        "fig16": fig16_brook, "fig17": fig17_serving,
         "compaction": compaction_bench,
         "kernels": kernel_bench, "roofline": roofline_table,
     }

@@ -144,6 +144,14 @@ class DynParams(NamedTuple):
     drain: jnp.ndarray
     max_iters: jnp.ndarray
     n_active: jnp.ndarray
+    # (T,) per-thread transaction quota: a thread reaching START with
+    # ``txn >= txn_cap[tid]`` HALTs instead of generating a new txn. INF
+    # (the split_config default) is the closed loop — the check is then
+    # identically false, so classic runs are bitwise unchanged. The
+    # serving layer (repro.serving) meters this as admission credits and
+    # revives HALTed slots between segments, which turns thread slots
+    # into an open-system worker pool.
+    txn_cap: jnp.ndarray
     # --- workload ---
     wl: DynWorkload
 
@@ -179,6 +187,7 @@ def split_config(cfg: EngineConfig, pad_threads: int | None = None,
         horizon=i32(cfg.horizon), p_abort=f32(cfg.p_abort),
         drain=b(cfg.drain), max_iters=i32(cfg.max_iters),
         n_active=i32(cfg.n_threads),
+        txn_cap=jnp.full((T,), INF, I32),
         wl=dyn_workload(w),
     )
     return stat, dp
@@ -715,8 +724,14 @@ def _make_step(stat: StaticShape, dp: DynParams, until=None):
         th = th._replace(phase=jnp.where(a_done, START, th.phase))
 
         # ------------------------------------------------ 7. START new txns
+        # A thread halts at the horizon OR when its transaction quota is
+        # exhausted (txn_cap; INF in closed loop). The quota check sits
+        # exactly where the horizon check does, so a capped thread halts
+        # the instant its last credited txn commits (6d set START this
+        # same iteration) — the serving layer revives it with new credits
+        # at the next segment boundary.
         st = th.phase == START
-        past = now >= dp.horizon
+        past = (now >= dp.horizon) | (th.txn >= dp.txn_cap)
         th = th._replace(phase=jnp.where(st & past, HALT, th.phase))
         st = st & ~past
         # fixed-TPS open loop: arrival_rate <= 0 means closed loop (no gate).

@@ -1,0 +1,23 @@
+"""Open-system serving layer: arrivals -> bounded engine pool -> tails.
+
+See :mod:`repro.serving.runner` for the serving loop,
+:mod:`repro.serving.arrivals` for the schedule generators, and
+:mod:`repro.serving.analytic` for the M/M/c validation oracle
+(Thomasian, arXiv:2404.02276). DESIGN.md §10 documents the layer.
+"""
+from .arrivals import (ArrivalSchedule, bursty, flash_crowd, poisson,
+                       saturating, uniform)
+from .runner import (ServeCell, ServeResults, ServingRecord, ServingResult,
+                     serve)
+from .analytic import (erlang_c, mmc_wait_ticks, pool_capacity_tps,
+                       predicted_response_ticks, predicted_util,
+                       service_ticks, write_fraction)
+
+__all__ = [
+    "ArrivalSchedule", "poisson", "bursty", "flash_crowd", "uniform",
+    "saturating",
+    "ServeCell", "ServeResults", "ServingRecord", "ServingResult", "serve",
+    "erlang_c", "mmc_wait_ticks", "pool_capacity_tps",
+    "predicted_response_ticks", "predicted_util", "service_ticks",
+    "write_fraction",
+]
