@@ -1,0 +1,71 @@
+"""Fig 18: wait-profile — where every thread-tick goes, per protocol.
+
+The paper's argument in one table: on the fig2 hotspot, mysql burns its
+ticks on lock-wait plus deadlock-detection scans, o2's early release
+converts wait into exec, group commit trades some exec for commit-wait
+amortization, and brook2pl removes detection entirely (ordered acquire
+is deadlock-free). Rows carry TickBreakdown *fractions* (sum ≈ 1 over
+exec/lock_wait/commit_wait/rollback/detection/sync/idle), straight from
+the engine's on-device accumulator — no sampling, no host probes.
+
+A final traced row profiles mysql on a deadlock-prone zipf workload
+through the event buffer (``simulate_traced``): wait spans, victims,
+drop accounting — the same data ``examples/trace_quickstart.py`` exports
+to Perfetto.
+"""
+import time
+
+import numpy as np
+
+from .common import emit
+from repro.core.lock import WorkloadSpec, simulate, extract
+from repro.obs import (check_conservation, fractions, simulate_traced,
+                       events_host, EV_WAIT_ENTER, EV_VICTIM, EV_GRANT,
+                       EV_TIMEOUT)
+
+HOT = WorkloadSpec(kind="hotspot_update", txn_len=1, n_rows=512)
+ZIPF = WorkloadSpec(kind="zipf", txn_len=4, n_rows=2048, zipf_s=0.9)
+PROTOCOLS = ("mysql", "o2", "group", "brook2pl")
+
+
+def _frac_row(name: str, wall_us: float, bd: dict) -> str:
+    fr = fractions(bd)
+    body = ";".join(f"{k}={v:.4f}" for k, v in fr.items())
+    return f"{name},{wall_us:.1f},{body}"
+
+
+def run(quick=True):
+    horizon = 150_000 if quick else 1_000_000
+    threads = 256
+    rows = []
+
+    # (a) attribution fractions on the fig2 hotspot, one row per protocol
+    for proto in PROTOCOLS:
+        t0 = time.perf_counter()
+        s = simulate(proto, HOT, n_threads=threads, horizon=horizon)
+        r = extract(proto, threads, s)
+        wall_us = (time.perf_counter() - t0) * 1e6
+        check_conservation(s, int(s.th.phase.shape[0]))
+        rows.append(_frac_row(f"fig18_{proto}", wall_us, r.breakdown))
+
+    # (b) event-trace profile: mysql under deadlock-prone zipf contention
+    t0 = time.perf_counter()
+    horizon_tr = 120_000 if quick else 500_000
+    s, tb = simulate_traced("mysql", ZIPF, n_threads=64,
+                            horizon=horizon_tr, cap=65_536)
+    wall_us = (time.perf_counter() - t0) * 1e6
+    ev = events_host(tb)
+    n = int(ev["n"])
+    counts = np.bincount(ev["ev"], minlength=8)
+    rows.append(
+        f"fig18_profile_mysql,{wall_us:.1f},"
+        f"events={n};dropped={int(ev['dropped'])};"
+        f"wait_enter={int(counts[EV_WAIT_ENTER])};"
+        f"grant={int(counts[EV_GRANT])};"
+        f"timeout={int(counts[EV_TIMEOUT])};"
+        f"deadlock_victim={int(counts[EV_VICTIM])}")
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -13,6 +13,22 @@ import sys
 import time
 
 
+def _peak_rss_mb() -> float:
+    """High-water-mark resident set of this process, in MiB.
+
+    ``ru_maxrss`` is KiB on Linux, bytes on macOS; 0.0 where the
+    ``resource`` module is unavailable (non-POSIX).
+    """
+    try:
+        import resource
+        rss = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+        if sys.platform == "darwin":
+            rss //= 1024
+        return rss / 1024.0
+    except Exception:
+        return 0.0
+
+
 def _parse_row(row: str) -> dict:
     """'name,us,k=v;k=v' -> record dict (values floated where clean).
 
@@ -50,8 +66,9 @@ def main() -> None:
     from . import (common, compaction_bench, fig02_motivation,
                    fig06_ablation, fig07_mix, fig08_scalability, fig09_sync,
                    fig10_abort_skew, fig12_tpcc, fig13_batch, fig14_recovery,
-                   fig15_adaptive, fig16_brook, fig17_serving, kernel_bench,
-                   roofline_table)
+                   fig15_adaptive, fig16_brook, fig17_serving,
+                   fig18_waitprofile, kernel_bench, roofline_table)
+    from repro.obs import compile_log
     modules = {
         "fig02": fig02_motivation, "fig06": fig06_ablation,
         "fig07": fig07_mix, "fig08": fig08_scalability,
@@ -59,6 +76,7 @@ def main() -> None:
         "fig12": fig12_tpcc, "fig13": fig13_batch,
         "fig14": fig14_recovery, "fig15": fig15_adaptive,
         "fig16": fig16_brook, "fig17": fig17_serving,
+        "fig18": fig18_waitprofile,
         "compaction": compaction_bench,
         "kernels": kernel_bench, "roofline": roofline_table,
     }
@@ -72,6 +90,10 @@ def main() -> None:
         print(f"# --- {name} ---")
         sys.stdout.flush()
         tm = time.time()
+        # compile accounting spans every jitted entry point (engine, aria,
+        # traced runner, registered extras) — the sweep stats only see the
+        # sweep substrate, so this is the whole-process truth per module
+        compiles0 = compile_log.total_compiles()
         try:
             rows = mod.run(quick=quick) or []
         except Exception as e:  # keep the harness going
@@ -79,6 +101,8 @@ def main() -> None:
             common.pop_sweep_stats()    # drop partial accounting
             doc["modules"][name] = {
                 "wall_s": time.time() - tm,
+                "compiles": compile_log.total_compiles() - compiles0,
+                "peak_rss_mb": _peak_rss_mb(),
                 "error": f"{type(e).__name__}: {e}",
                 "rows": [],
             }
@@ -90,6 +114,11 @@ def main() -> None:
         doc["modules"][name] = {
             "wall_s": time.time() - tm,
             "quick": quick,
+            "compiles": compile_log.total_compiles() - compiles0,
+            # ru_maxrss is a process-lifetime high-water mark, so this is
+            # monotone across modules in one run — compare same-position
+            # or --only runs across commits, not adjacent modules
+            "peak_rss_mb": _peak_rss_mb(),
             "rows": [_parse_row(r) for r in rows],
             "sweeps": sweeps,
         }

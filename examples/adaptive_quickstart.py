@@ -55,7 +55,7 @@ def main():
     out = os.environ.get("ADAPTIVE_QUICKSTART_JSON",
                          "/tmp/adaptive_quickstart.json")
     save_results(out, res, meta={"example": "adaptive_quickstart"})
-    print(f"# per-segment records written to {out} (repro.sweep/v2)")
+    print(f"# per-segment records written to {out} (repro.sweep/v3)")
 
 
 if __name__ == "__main__":

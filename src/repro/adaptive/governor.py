@@ -124,9 +124,15 @@ class SegmentRecord:
     n_hot: int              # promoted-hot rows at t1
     n_live: int             # live tickets at t1
     n_waiting: int          # threads in a wait phase at t1
+    # distribution observables at t1 (obs layer, engine.SegSnapshot):
+    # log2-bucket histograms of row wait-queue depth (all rows) and live-
+    # ticket occupancy (hot rows only). Defaulted empty so pre-PR7 record
+    # construction sites / pickles keep working.
+    wait_hist: tuple = ()
+    occ_hist: tuple = ()
 
     def as_json(self) -> dict:
-        """Compact time-series entry for the results store (v2 schema)."""
+        """Compact time-series entry for the results store (v3 schema)."""
         m = self.metrics
         return {
             "index": self.index, "t0": self.t0, "t1": self.t1,
@@ -136,6 +142,12 @@ class SegmentRecord:
             "cpu_util": m.cpu_util, "max_qlen": self.max_qlen,
             "n_hot": self.n_hot, "n_live": self.n_live,
             "n_waiting": self.n_waiting,
+            # v3 additions: per-window TickBreakdown (ticks per bin,
+            # branches summed; conserves to pad_T * (t1 - t0)) and the
+            # end-of-segment distribution histograms
+            "breakdown": dict(m.breakdown),
+            "wait_hist": list(self.wait_hist),
+            "occ_hist": list(self.occ_hist),
         }
 
 

@@ -18,7 +18,7 @@ stay host-side Python between segments either way.
 
 Results come back as a plain :class:`~repro.sweep.runner.SweepResults`
 whose ``segments`` field carries the per-segment time series, so the JSON
-store (schema ``repro.sweep/v2``), ``summarize``, and the benchmark
+store (schema ``repro.sweep/v3``), ``summarize``, and the benchmark
 harness all work unchanged.
 """
 from __future__ import annotations
@@ -216,7 +216,9 @@ def run_governed(cells: Iterable[GovernorCell], *, horizon: int,
                     index=k, t0=int(g_prev[j].now), t1=int(g_now.now),
                     preset=p, metrics=r, max_qlen=int(snap.max_qlen),
                     n_hot=int(snap.n_hot), n_live=int(snap.n_live),
-                    n_waiting=int(snap.n_waiting)))
+                    n_waiting=int(snap.n_waiting),
+                    wait_hist=tuple(int(v) for v in snap.wait_hist),
+                    occ_hist=tuple(int(v) for v in snap.occ_hist)))
                 g_prev[j] = g_now
 
         wall_b = time.perf_counter() - t_bucket

@@ -6,8 +6,9 @@ from .workload import (WorkloadSpec, DynWorkload, dyn_workload, zipf_cdf,
                        zipf_cdf_table, DriftSchedule, DRIFT_KINDS,
                        stationary, hot_migration, skew_ramp, flash_crowd)
 from .engine import (EngineConfig, StaticShape, DynParams, split_config,
-                     SimState, SegSnapshot, init_state, init_state_dyn,
-                     run_sim, run_segment, simulate,
+                     SimState, SegSnapshot, StepEvents, init_state,
+                     init_state_dyn, run_sim, run_segment, simulate,
+                     N_TB, TB_NAMES, TB_BRANCHES, N_QHIST,
                      START, WAIT, EXEC, CWAIT, COMMIT, RBACK, RBWAIT,
                      BACKOFF, ARRIVE, HALT)
 from .metrics import (SimResult, extract, extract_segment, delta_globals,
@@ -21,8 +22,9 @@ __all__ = [
     "zipf_cdf_table", "DriftSchedule", "DRIFT_KINDS", "stationary",
     "hot_migration", "skew_ramp", "flash_crowd",
     "EngineConfig", "StaticShape", "DynParams", "split_config",
-    "SimState", "SegSnapshot", "init_state", "init_state_dyn", "run_sim",
-    "run_segment", "simulate",
+    "SimState", "SegSnapshot", "StepEvents", "init_state", "init_state_dyn",
+    "run_sim", "run_segment", "simulate",
+    "N_TB", "TB_NAMES", "TB_BRANCHES", "N_QHIST",
     "SimResult", "extract", "extract_segment", "delta_globals",
     "CSV_HEADER", "TICKS_PER_SEC",
     "simulate_aria", "extract_aria",

@@ -81,6 +81,31 @@ HIST_BASE = 1.3
 START, WAIT, EXEC, CWAIT, COMMIT, RBACK, RBWAIT, BACKOFF, ARRIVE, HALT = \
     range(10)
 
+# --- tick attribution (obs layer, DESIGN.md §11) -------------------------
+# Every thread-tick of the horizon lands in exactly one TickBreakdown bin,
+# split by protocol branch (cold = plain 2PL path, hot = the thread's
+# current row is promoted hot), so sum(Globals.tb) == T * Globals.now is a
+# hard conservation invariant (asserted in tests; i32, exact mod 2^32).
+N_TB = 7
+TB_EXEC, TB_LOCKWAIT, TB_COMMITWAIT, TB_ROLLBACK, TB_DETECT, TB_SYNC, \
+    TB_IDLE = range(N_TB)
+TB_NAMES = ("exec", "lock_wait", "commit_wait", "rollback", "detection",
+            "sync", "idle")
+TB_BRANCHES = ("cold", "hot")
+# phase -> bin. START/ARRIVE/HALT are idle (no txn holds the thread);
+# RBACK work + RBWAIT turn-waits + BACKOFF all charge the rollback bin;
+# COMMIT work (commit_base + sync window) charges sync. EXEC splits at
+# runtime: the deadlock-detection ticks folded into the grant overhead
+# (Threads.detleft) are consumed first and charged to TB_DETECT.
+_TB_PHASE_BIN = np.array(
+    [TB_IDLE, TB_LOCKWAIT, TB_EXEC, TB_COMMITWAIT, TB_SYNC,
+     TB_ROLLBACK, TB_ROLLBACK, TB_ROLLBACK, TB_IDLE, TB_IDLE],
+    dtype=np.int32)
+
+# log2 buckets for snapshot occupancy histograms: bucket 0 = empty,
+# bucket b>=1 = count in [2**(b-1), 2**b). 12 buckets cover queues of 2k+.
+N_QHIST = 12
+
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
@@ -214,6 +239,7 @@ class Threads(NamedTuple):
     lastu: jnp.ndarray      # (T, L) bool: slot is its key's last use (chop)
     released: jnp.ndarray   # (T, L) bool: ticket retired at its release pt
     nops: jnp.ndarray       # (T,)
+    detleft: jnp.ndarray    # (T,) detection ticks left in current EXEC work
 
 
 class Rows(NamedTuple):
@@ -241,6 +267,7 @@ class Globals(NamedTuple):
     hist: jnp.ndarray           # (N_HIST,) i32 latency histogram
     dd_ticks: jnp.ndarray       # deadlock-detection ticks paid on grants
     iters: jnp.ndarray
+    tb: jnp.ndarray             # (len(TB_BRANCHES), N_TB) i32 TickBreakdown
 
 
 class SimState(NamedTuple):
@@ -340,7 +367,37 @@ def _derive(stat: StaticShape, dp: DynParams, th: Threads,
 # engine step
 # ---------------------------------------------------------------------------
 
-def _make_step(stat: StaticShape, dp: DynParams, until=None):
+class StepEvents(NamedTuple):
+    """Per-iteration event masks surfaced by :func:`_make_step_events`.
+
+    Everything here is *already computed* by the step — this tuple only
+    names the masks so the obs layer (``repro.obs.trace``) can record
+    them into a ring buffer inside the same ``lax.while_loop``. The
+    classic entry points drop the tuple on the floor, and XLA dead-code
+    eliminates it, so exposing events costs the untraced engine nothing.
+
+    Mask timing: ``grant``/``group_join``/``timeout``/``victim`` describe
+    transitions decided at the *start* of the interval (timestamp
+    ``t_pre``); ``release``/``commit``/``wait_enter`` fire at its end
+    (``t_post``). Rows: ``row_cur`` is the thread's current-op row for
+    start-of-interval events and ``release``; ``row_begin`` is the row of
+    the op begun this iteration (``wait_enter``); ``commit`` is a
+    thread-level event (row -1 in the trace).
+    """
+    t_pre: jnp.ndarray       # () tick at interval start
+    t_post: jnp.ndarray      # () tick at interval end
+    row_cur: jnp.ndarray     # (T,) current-op row at interval start
+    row_begin: jnp.ndarray   # (T,) row of the op begun this iteration
+    grant: jnp.ndarray       # (T,) bool WAIT -> EXEC lock grant
+    group_join: jnp.ndarray  # (T,) bool grant joined an open hot group
+    timeout: jnp.ndarray     # (T,) bool lock/commit wait timed out
+    victim: jnp.ndarray      # (T,) bool chosen as deadlock victim
+    release: jnp.ndarray     # (T,) bool brook per-op early release
+    commit: jnp.ndarray      # (T,) bool txn committed
+    wait_enter: jnp.ndarray  # (T,) bool took a ticket, entered WAIT
+
+
+def _make_step_events(stat: StaticShape, dp: DynParams, until=None):
     """Build the tick-step function. ``stat`` is static (shapes + kind);
     every parameter in ``dp`` is traced, so protocol branches are computed
     unconditionally and masked — the price of one program for all configs.
@@ -367,6 +424,7 @@ def _make_step(stat: StaticShape, dp: DynParams, until=None):
     R = stat.n_rows
     L = stat.txn_len
     tids = jnp.arange(T, dtype=I32)
+    tb_bin = jnp.asarray(_TB_PHASE_BIN)
     stop_time = _stop_time(dp)
     idle_stop = stop_time if until is None else jnp.minimum(stop_time,
                                                             until)
@@ -375,7 +433,7 @@ def _make_step(stat: StaticShape, dp: DynParams, until=None):
         """Gather per-thread value at its current op slot (clipped)."""
         return field_tl[tids, jnp.clip(oph, 0, L - 1)]
 
-    def step(s: SimState) -> SimState:
+    def step(s: SimState) -> tuple[SimState, StepEvents]:
         th, rows, g = s
         d = _derive(stat, dp, th, rows)
         now = g.now
@@ -390,7 +448,8 @@ def _make_step(stat: StaticShape, dp: DynParams, until=None):
         to = in_wait & ((now - th.wstart) >= dp.wait_timeout)
         to |= (th.phase == CWAIT) & (
             (now - th.wstart) >= dp.commit_wait_timeout)
-        forced = forced | (to & (dp.wait_timeout > 0))
+        to_fire = to & (dp.wait_timeout > 0)
+        forced = forced | to_fire
         # 1b. deadlock detection (waits-for cycle walk, up to 8 hops),
         # 2PL-style protocols. One victim per cycle: its max thread id.
         # lax.cond so single-config runs of detection-free protocols skip
@@ -481,7 +540,10 @@ def _make_step(stat: StaticShape, dp: DynParams, until=None):
 
         th = th._replace(
             phase=jnp.where(grantable, EXEC, th.phase),
-            work=jnp.where(grantable, work_g, th.work))
+            work=jnp.where(grantable, work_g, th.work),
+            # detection ticks inside this grant's work (tick attribution)
+            detleft=jnp.where(grantable, jnp.where(hotq, 0, dd),
+                              th.detleft))
         g = g._replace(
             wait_ticks=g.wait_ticks
             + jnp.sum(jnp.where(grantable, (now - th.wstart), 0)).astype(F32),
@@ -616,6 +678,24 @@ def _make_step(stat: StaticShape, dp: DynParams, until=None):
                   | (th.phase == RBACK)).sum().astype(F32)
         g = g._replace(now=now, iters=g.iters + 1,
                        busy_ticks=g.busy_ticks + n_busy * dt.astype(F32))
+
+        # --- tick attribution (obs, DESIGN.md §11): charge dt to exactly
+        # one TickBreakdown bin per thread. Branch 1 ("hot") when the
+        # thread is engaged on a promoted-hot row; EXEC pays its pending
+        # detection ticks (detleft, set at grant) before exec proper.
+        # Each iteration contributes exactly T*dt across bins, so
+        # sum(g.tb) == T * g.now holds at every observation point.
+        is_ex = th.phase == EXEC
+        ddpay = jnp.where(is_ex, jnp.minimum(th.detleft, dt), 0)
+        th = th._replace(detleft=th.detleft - ddpay)
+        engaged = ((th.phase == WAIT) | is_ex | (th.phase == CWAIT)
+                   | (th.phase == COMMIT))
+        branch = jnp.where(engaged & rows.hot[cur_key], 1, 0)
+        tbf = g.tb.reshape(-1)
+        tbf = tbf.at[branch * N_TB + tb_bin[th.phase]].add(
+            jnp.where(is_ex, dt - ddpay, dt))
+        tbf = tbf.at[branch * N_TB + TB_DETECT].add(ddpay)
+        g = g._replace(tb=tbf.reshape(g.tb.shape))
 
         done = paying & (work <= 0)
 
@@ -773,7 +853,9 @@ def _make_step(stat: StaticShape, dp: DynParams, until=None):
         rd_cost = jnp.where(cur(th.iswr, th.op), dp.op_exec, dp.read_exec)
         th = th._replace(
             phase=jnp.where(direct, EXEC, th.phase),
-            work=jnp.where(direct, rd_cost, th.work))
+            work=jnp.where(direct, rd_cost, th.work),
+            # direct exec pays no grant overhead: no detection to attribute
+            detleft=jnp.where(direct, 0, th.detleft))
 
         # FIFO ticket assignment with same-tick ranking (sort by key).
         # Sentinel key R sorts all non-takers after every real key so they
@@ -820,9 +902,25 @@ def _make_step(stat: StaticShape, dp: DynParams, until=None):
             (rows.hot, rows.gleader, rows.gcount))
         rows = rows._replace(hot=hot, gleader=gleader, gcount=gcount)
 
-        return SimState(th, rows, g)
+        ev = StepEvents(
+            t_pre=s.g.now, t_post=g.now, row_cur=cur_key, row_begin=bkey,
+            grant=grantable, group_join=is_member_grant, timeout=to_fire,
+            victim=victim, release=rel_now, commit=c_done,
+            wait_enter=need_ticket)
+        return SimState(th, rows, g), ev
 
     return step
+
+
+def _make_step(stat: StaticShape, dp: DynParams, until=None):
+    """Classic step: :func:`_make_step_events` minus the event tuple.
+
+    All non-traced entry points route through this wrapper; XLA DCEs the
+    dropped event masks (they are aliases of values the step computes
+    anyway), so the split is free.
+    """
+    step_events = _make_step_events(stat, dp, until=until)
+    return lambda s: step_events(s)[0]
 
 
 # ---------------------------------------------------------------------------
@@ -854,6 +952,7 @@ def init_state_dyn(stat: StaticShape, dp: DynParams) -> SimState:
         lastu=jnp.zeros((T, L), bool),
         released=jnp.zeros((T, L), bool),
         nops=jnp.full((T,), L, I32),
+        detleft=jnp.zeros((T,), I32),
     )
     rows = Rows(
         nt=jnp.zeros((R,), I32),
@@ -879,6 +978,7 @@ def init_state_dyn(stat: StaticShape, dp: DynParams) -> SimState:
         hist=jnp.zeros((N_HIST,), I32),
         dd_ticks=jnp.asarray(0, I32),
         iters=jnp.asarray(0, I32),
+        tb=jnp.zeros((len(TB_BRANCHES), N_TB), I32),
     )
     return SimState(th, rows, g)
 
@@ -904,6 +1004,11 @@ def _run_core(stat: StaticShape, dp: DynParams, s0: SimState,
     boundaries (the jump splits into one iteration per segment).
     """
     step = _make_step(stat, dp, until=until)
+    return lax.while_loop(_make_cond(dp, until=until), step, s0)
+
+
+def _make_cond(dp: DynParams, until=None):
+    """Loop condition shared by classic and traced runners (obs layer)."""
     stop_time = _stop_time(dp)
 
     def cond(s: SimState):
@@ -915,7 +1020,7 @@ def _run_core(stat: StaticShape, dp: DynParams, s0: SimState,
             running = running & (s.g.now < until)
         return running & (s.g.iters < dp.max_iters)
 
-    return lax.while_loop(cond, step, s0)
+    return cond
 
 
 @functools.partial(jax.jit, static_argnums=0)
@@ -982,6 +1087,18 @@ class SegSnapshot(NamedTuple):
     n_hot: jnp.ndarray      # () i32  rows currently promoted hot
     n_live: jnp.ndarray     # () i32  live tickets across all rows
     n_waiting: jnp.ndarray  # () i32  threads in a lock/commit wait phase
+    # Distribution observables (obs layer): policies that only see maxima
+    # cannot tell one pathological queue from uniform pressure. Both are
+    # log2-bucket histograms (bucket 0 = empty, b >= 1 = [2**(b-1), 2**b)):
+    wait_hist: jnp.ndarray  # (N_QHIST,) rows by wait-queue depth (sums to R)
+    occ_hist: jnp.ndarray   # (N_QHIST,) HOT rows by live-ticket occupancy
+    #                         (sums to n_hot)
+
+
+def _q_bucket(v):
+    """log2 occupancy bucket: 0 -> 0, 1 -> 1, [2,4) -> 2, [4,8) -> 3, ..."""
+    f = jnp.log2(jnp.maximum(v, 1).astype(F32))
+    return jnp.clip(jnp.where(v <= 0, 0, f.astype(I32) + 1), 0, N_QHIST - 1)
 
 
 def _snapshot(stat: StaticShape, dp: DynParams, s: SimState) -> SegSnapshot:
@@ -992,7 +1109,10 @@ def _snapshot(stat: StaticShape, dp: DynParams, s: SimState) -> SegSnapshot:
         max_qlen=d.n_wait.max().astype(I32),
         n_hot=s.rows.hot.sum().astype(I32),
         n_live=d.n_live.sum().astype(I32),
-        n_waiting=waitish.sum().astype(I32))
+        n_waiting=waitish.sum().astype(I32),
+        wait_hist=jnp.zeros((N_QHIST,), I32).at[_q_bucket(d.n_wait)].add(1),
+        occ_hist=jnp.zeros((N_QHIST,), I32).at[_q_bucket(d.n_live)].add(
+            jnp.where(s.rows.hot, 1, 0)))
 
 
 def _run_seg_core(stat: StaticShape, dp: DynParams, s0: SimState,

@@ -17,7 +17,7 @@ import dataclasses
 
 import numpy as np
 
-from .engine import SimState, N_HIST, HIST_BASE
+from .engine import SimState, N_HIST, HIST_BASE, TB_NAMES
 
 TICKS_PER_SEC = 10_000_000  # 1 tick = 0.1us
 
@@ -43,6 +43,12 @@ class SimResult:
     # free protocols; brook2pl's acceptance metric). Defaulted so pre-PR5
     # Globals snapshots (no dd_ticks leaf) still extract.
     dd_ticks: int = 0
+    # TickBreakdown (obs layer, DESIGN.md §11): thread-tick attribution
+    # {bin_name: ticks} summed over branches, and the hot-branch share
+    # alone. sum(breakdown.values()) == T * now ticks (conservation).
+    # Defaulted empty so pre-PR7 Globals snapshots (no tb leaf) extract.
+    breakdown: dict = dataclasses.field(default_factory=dict)
+    breakdown_hot: dict = dataclasses.field(default_factory=dict)
 
     def row(self) -> str:
         return (f"{self.protocol},{self.n_threads},{self.tps:.0f},"
@@ -76,6 +82,13 @@ def extract_globals(protocol: str, n_threads: int, g) -> SimResult:
     now = max(int(g.now), 1)
     sim_s = now / TICKS_PER_SEC
     hist = np.asarray(g.hist)
+    tb = getattr(g, "tb", None)
+    if tb is not None:
+        tb = np.asarray(tb)
+        breakdown = {k: int(tb[:, i].sum()) for i, k in enumerate(TB_NAMES)}
+        breakdown_hot = {k: int(tb[1, i]) for i, k in enumerate(TB_NAMES)}
+    else:                       # pre-PR7 Globals snapshot
+        breakdown, breakdown_hot = {}, {}
     lat_mean = (float(g.lat_sum) / commits / 10.0) if commits else 0.0
     total_lat_ticks = max(float(g.lat_sum), 1.0)
     return SimResult(
@@ -95,6 +108,8 @@ def extract_globals(protocol: str, n_threads: int, g) -> SimResult:
         abort_rate=aborts / max(commits + aborts, 1),
         iters=int(g.iters),
         dd_ticks=int(getattr(g, "dd_ticks", 0)),
+        breakdown=breakdown,
+        breakdown_hot=breakdown_hot,
     )
 
 

@@ -1,0 +1,36 @@
+"""Observability layer for the lock engine (opt-in, traced-flag gated).
+
+Three parts (DESIGN.md §11):
+
+* **Tick attribution** — the engine itself charges every thread-tick to a
+  ``TickBreakdown`` bin (``Globals.tb``; exec / lock_wait / commit_wait /
+  rollback / detection / sync / idle, split cold/hot); this package holds
+  the conservation check (``sum(tb) == T * elapsed``) and report helpers.
+* **Event tracing** (:mod:`.trace`) — a fixed-allocation on-device buffer
+  capturing {tick, thread, row, event} inside the ``lax.while_loop``;
+  capacity and the on-switch are traced data, so tracing never recompiles
+  and ``trace_on=False`` is bit-exact with the untraced engine.
+* **Export** (:mod:`.export`) — Chrome trace-event JSON (Perfetto) and
+  text wait-profile / breakdown reports.
+
+:mod:`.compile_log` is the shared compile counter benchmarks use to put
+recompile regressions on the perf trajectory.
+"""
+from . import breakdown, compile_log, export, trace
+from .breakdown import (breakdown_row, check_conservation, fractions,
+                        tick_sum)
+from .export import (breakdown_table, dump_chrome_trace, to_chrome_trace,
+                     wait_profile)
+from .trace import (EVENTS, EV_COMMIT, EV_GRANT, EV_GROUP_JOIN, EV_RELEASE,
+                    EV_TIMEOUT, EV_VICTIM, EV_WAIT_ENTER, TraceBuf,
+                    events_host, make_trace, run_traced, simulate_traced)
+
+__all__ = [
+    "breakdown", "compile_log", "export", "trace",
+    "breakdown_row", "check_conservation", "fractions", "tick_sum",
+    "breakdown_table", "dump_chrome_trace", "to_chrome_trace",
+    "wait_profile",
+    "EVENTS", "EV_COMMIT", "EV_GRANT", "EV_GROUP_JOIN", "EV_RELEASE",
+    "EV_TIMEOUT", "EV_VICTIM", "EV_WAIT_ENTER", "TraceBuf", "events_host",
+    "make_trace", "run_traced", "simulate_traced",
+]

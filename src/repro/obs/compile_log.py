@@ -1,0 +1,45 @@
+"""Shared compile counter across the repo's jitted entry points.
+
+Tests assert per-path compile counts locally (``fn._cache_size()``), but
+nothing tracked the *global* compile total across a benchmark module —
+a recompile regression (a param accidentally promoted into the compile
+key) only surfaced as mysterious wall-time. ``benchmarks/run.py`` now
+records ``total_compiles()`` deltas per module into BENCH_run.json so the
+perf trajectory catches it directly.
+
+Subsystems with their own jitted entry points register them here
+(idempotent); the core engine/aria/obs entry points are built in.
+"""
+from __future__ import annotations
+
+_EXTRA: list = []
+
+
+def register(fn) -> None:
+    """Add a jitted function to the global compile accounting."""
+    if fn not in _EXTRA:
+        _EXTRA.append(fn)
+
+
+def _jitted() -> list:
+    # imported lazily: this module must stay importable before jax warms up
+    from repro.core.lock import aria, engine
+    from repro.obs import trace
+    return [
+        engine._run_dyn, engine._run_batch,
+        engine._run_seg_dyn, engine._run_seg_batch,
+        aria._run_dyn, aria._run_batch,
+        aria._run_seg_dyn, aria._run_seg_batch,
+        trace._run_traced,
+    ] + list(_EXTRA)
+
+
+def total_compiles() -> int:
+    """Sum of jit-cache sizes over every registered entry point."""
+    total = 0
+    for fn in _jitted():
+        try:
+            total += int(fn._cache_size())
+        except Exception:      # cache API unavailable: count what we can
+            pass
+    return total

@@ -1,0 +1,176 @@
+"""On-device lock-event tracing inside the engine's ``lax.while_loop``.
+
+The engine's step already *computes* every interesting transition mask
+(grants, waits, timeouts, deadlock victims, early releases, group joins,
+commits) — it just throws them away. :func:`_make_step_events` surfaces
+them as :class:`repro.core.lock.engine.StepEvents`, and this module
+appends them to a fixed-allocation device buffer each iteration:
+
+* **Capacity is data, not shape** (DESIGN.md §11): the buffer *allocation*
+  is a shape (part of the compile key, like T/L/R), but the usable
+  *capacity* and the master ``on`` switch are traced i32/bool leaves of
+  :class:`TraceBuf`. One compiled program serves every capacity up to the
+  allocation and both trace settings — ``trace_on=False`` runs the
+  identical arithmetic on the identical state leaves and writes nothing,
+  so it is bit-exact with the untraced engine (asserted in
+  tests/test_obs.py) and adds nothing to the compile key.
+* **Full buffer drops, never wraps**: once ``n`` reaches ``cap`` further
+  events bump ``dropped`` and leave stored entries untouched. A prefix of
+  the truth beats a corrupted ring for debugging, and the drop counter
+  makes truncation loud.
+* Events are appended in simulated-time order by construction:
+  start-of-interval events (``t_pre``) precede end-of-interval events
+  (``t_post``) within an iteration, and ``t_post`` of iteration k equals
+  ``t_pre`` of iteration k+1. Exports never need to sort.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.lock import engine
+from repro.core.lock.costs import CostModel, protocol_params
+from repro.core.lock.engine import (DynParams, EngineConfig, I32, INF, NOTK,
+                                    SegSnapshot, SimState, StaticShape,
+                                    StepEvents, split_config, init_state_dyn)
+from repro.core.lock.workload import WorkloadSpec
+
+# event ids — index into EVENTS; stable across PRs (traces are artifacts)
+EVENTS = ("grant", "wait_enter", "timeout", "deadlock_victim",
+          "early_release", "group_join", "commit")
+(EV_GRANT, EV_WAIT_ENTER, EV_TIMEOUT, EV_VICTIM, EV_RELEASE, EV_GROUP_JOIN,
+ EV_COMMIT) = range(len(EVENTS))
+
+
+class TraceBuf(NamedTuple):
+    """Fixed-allocation event buffer; all scalars traced (see module doc)."""
+    ts: jnp.ndarray       # (A,) i32 tick of the event
+    tid: jnp.ndarray      # (A,) i32 thread id
+    row: jnp.ndarray      # (A,) i32 row id (NOTK for thread-level events)
+    ev: jnp.ndarray       # (A,) i32 event id (index into EVENTS)
+    n: jnp.ndarray        # ()   i32 events stored
+    dropped: jnp.ndarray  # ()   i32 events dropped at capacity
+    cap: jnp.ndarray      # ()   i32 usable capacity (traced, <= A)
+    on: jnp.ndarray      # ()   bool master switch (traced)
+
+
+def make_trace(cap: int = 4096, alloc: int | None = None,
+               on: bool = True) -> TraceBuf:
+    """Fresh buffer. ``alloc`` (static, defaults to ``cap``) is the compile
+    key; ``cap``/``on`` are traced — vary them freely on one executable."""
+    A = int(alloc if alloc is not None else cap)
+    return TraceBuf(
+        ts=jnp.full((A,), NOTK), tid=jnp.full((A,), NOTK),
+        row=jnp.full((A,), NOTK), ev=jnp.full((A,), NOTK),
+        n=jnp.asarray(0, I32), dropped=jnp.asarray(0, I32),
+        cap=jnp.asarray(min(int(cap), A), I32), on=jnp.asarray(on, bool))
+
+
+def _record(tbuf: TraceBuf, se: StepEvents) -> TraceBuf:
+    """Append one iteration's events (device, inside the while_loop).
+
+    Blocks are laid out t_pre-first so the buffer stays time-ordered; a
+    compaction cumsum packs the fired events densely, positions past
+    ``cap`` fall off via ``mode="drop"`` scatters and count as dropped.
+    With ``on=False`` every mask is false and the whole call is the
+    identity on ``tbuf`` — the zero-cost-off argument in one line.
+    """
+    T = se.grant.shape[0]
+    tids = jnp.arange(T, dtype=I32)
+    no_row = jnp.full((T,), NOTK)
+    blocks = (
+        (se.timeout, se.t_pre, se.row_cur, EV_TIMEOUT),
+        (se.victim, se.t_pre, se.row_cur, EV_VICTIM),
+        (se.grant, se.t_pre, se.row_cur, EV_GRANT),
+        (se.group_join, se.t_pre, se.row_cur, EV_GROUP_JOIN),
+        (se.release, se.t_post, se.row_cur, EV_RELEASE),
+        (se.commit, se.t_post, no_row, EV_COMMIT),
+        (se.wait_enter, se.t_post, se.row_begin, EV_WAIT_ENTER),
+    )
+    m = jnp.concatenate([b[0] & tbuf.on for b in blocks])
+    ts = jnp.concatenate([jnp.broadcast_to(b[1], (T,)) for b in blocks])
+    row = jnp.concatenate([b[2] for b in blocks])
+    evid = jnp.concatenate([jnp.full((T,), b[3], I32) for b in blocks])
+    tid = jnp.concatenate([tids] * len(blocks))
+
+    pos = tbuf.n + jnp.cumsum(m.astype(I32)) - 1     # dense append position
+    ok = m & (pos < tbuf.cap)
+    A = tbuf.ts.shape[0]
+    slot = jnp.where(ok, pos, A)                      # OOB -> dropped
+    total = m.sum().astype(I32)
+    stored = ok.sum().astype(I32)
+    return tbuf._replace(
+        ts=tbuf.ts.at[slot].set(ts, mode="drop"),
+        tid=tbuf.tid.at[slot].set(tid, mode="drop"),
+        row=tbuf.row.at[slot].set(row, mode="drop"),
+        ev=tbuf.ev.at[slot].set(evid, mode="drop"),
+        n=tbuf.n + stored,
+        dropped=tbuf.dropped + (total - stored))
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def _run_traced(stat: StaticShape, dp: DynParams, s0: SimState,
+                tb0: TraceBuf,
+                until) -> tuple[SimState, TraceBuf, SegSnapshot]:
+    """Traced twin of ``engine._run_dyn``/``_run_seg_dyn``: same step, same
+    cond, with the TraceBuf riding in the loop carry. ``until`` is traced
+    (pass INF for whole-run; a finite boundary pauses at the segment edge
+    exactly like ``run_segment``). One executable per (shape, alloc)."""
+    step_ev = engine._make_step_events(stat, dp, until=until)
+    cond = engine._make_cond(dp, until=until)
+
+    def body(carry):
+        s, tb = carry
+        s2, ev = step_ev(s)
+        return s2, _record(tb, ev)
+
+    s, tb = lax.while_loop(lambda c: cond(c[0]), body, (s0, tb0))
+    return s, tb, engine._snapshot(stat, dp, s)
+
+
+def run_traced(stat: StaticShape, dp: DynParams, state: SimState,
+               tbuf: TraceBuf,
+               until=None) -> tuple[SimState, TraceBuf, SegSnapshot]:
+    """Advance ``state`` with event tracing; resumable like run_segment.
+
+    With ``tbuf.on`` false the returned state is bit-exact with the
+    untraced entry points (same step sequence, same arithmetic)."""
+    u = INF if until is None else jnp.asarray(until, I32)
+    return _run_traced(stat, dp, state, tbuf, u)
+
+
+def simulate_traced(protocol: str, workload: WorkloadSpec, n_threads: int,
+                    costs: CostModel | None = None,
+                    horizon: int = 2_000_000, p_abort: float = 0.0,
+                    drain: bool = False, seed: int = 0, cap: int = 4096,
+                    alloc: int | None = None, trace_on: bool = True,
+                    **proto_over) -> tuple[SimState, TraceBuf]:
+    """Traced twin of :func:`repro.core.lock.simulate`."""
+    cfg = EngineConfig(
+        protocol=protocol_params(protocol, **proto_over),
+        costs=costs or CostModel(), workload=workload,
+        n_threads=n_threads, horizon=horizon, p_abort=p_abort,
+        drain=drain, seed=seed)
+    stat, dp = split_config(cfg)
+    tb0 = make_trace(cap, alloc=alloc, on=trace_on)
+    s, tb, _ = run_traced(stat, dp, init_state_dyn(stat, dp), tb0)
+    return s, tb
+
+
+def events_host(tbuf: TraceBuf) -> dict:
+    """Pull the stored prefix to host: numpy columns + counters."""
+    n = int(tbuf.n)
+    return {
+        "ts": np.asarray(tbuf.ts)[:n],
+        "tid": np.asarray(tbuf.tid)[:n],
+        "row": np.asarray(tbuf.row)[:n],
+        "ev": np.asarray(tbuf.ev)[:n],
+        "n": n,
+        "dropped": int(tbuf.dropped),
+        "cap": int(tbuf.cap),
+    }

@@ -55,9 +55,10 @@ import jax.numpy as jnp
 
 from repro.core.lock import engine as _engine
 from repro.core.lock.costs import CostModel
-from repro.core.lock.engine import EngineConfig, I32
+from repro.core.lock.engine import EngineConfig, I32, N_HIST
 from repro.core.lock.metrics import (SimResult, TICKS_PER_SEC,
-                                     extract_globals, extract_segment)
+                                     _pct_from_hist, extract_globals,
+                                     extract_segment)
 from repro.core.lock.workload import WorkloadSpec
 from repro.sweep.grid import SweepPoint
 from repro.sweep.runner import (BucketInfo, SweepResults, MIN_T_BUCKET,
@@ -65,6 +66,7 @@ from repro.sweep.runner import (BucketInfo, SweepResults, MIN_T_BUCKET,
                                 run_packed_segment)
 from repro.adaptive.governor import (PRESETS, Policy, SegmentRecord,
                                      preset_params, switch_safe)
+from repro.obs import compile_log as _compile_log
 
 from .arrivals import ArrivalSchedule
 
@@ -131,6 +133,9 @@ class ServingRecord:
             "p99_us": self.p99_us, "p999_us": self.p999_us,
             "sla_miss": self.sla_miss, "max_qlen": self.max_qlen,
             "n_waiting": self.n_waiting,
+            # v3 addition: per-window TickBreakdown (ticks per bin,
+            # branches summed; conserves to pad_T * (t1 - t0))
+            "breakdown": dict(m.breakdown),
         }
 
 
@@ -178,6 +183,11 @@ class ServeResults(SweepResults):
     serving: dict[str, ServingResult] = dataclasses.field(
         default_factory=dict)
     states: dict = dataclasses.field(default_factory=dict)
+    # raw response times in us per cell, only when serve(...,
+    # keep_responses=True) — the parity check for the histogram
+    # percentiles; empty by default (horizon-scale runs must not haul
+    # O(completions) floats to host)
+    responses: dict = dataclasses.field(default_factory=dict)
 
 
 def _seg_compiles() -> int:
@@ -196,11 +206,37 @@ def _pctl(resp_us: list, q: float) -> float:
     return float(np.percentile(np.asarray(resp_us), q)) if resp_us else 0.0
 
 
+@jax.jit
+def _hist_add(hist, ticks, valid):
+    """Fold a padded batch of response ticks into the engine's log-bucket
+    histogram (same buckets as the commit-latency histogram, so both
+    percentile paths share ``_pct_from_hist``)."""
+    return hist.at[_engine._hist_bucket(ticks)].add(
+        jnp.where(valid, 1, 0), mode="drop")
+
+
+_compile_log.register(_hist_add)
+
+
+def _resp_hist_update(hist, resp_ticks: list):
+    """Host shim: pad the boundary's completions to a pow2 width (bounded
+    executable ladder — boundary sizes vary freely, compiles don't)."""
+    n = len(resp_ticks)
+    if n == 0:
+        return hist
+    W = max(64, 1 << (n - 1).bit_length())
+    t = np.zeros(W, dtype=np.int32)
+    t[:n] = resp_ticks
+    v = np.zeros(W, dtype=bool)
+    v[:n] = True
+    return _hist_add(hist, jnp.asarray(t), jnp.asarray(v))
+
+
 class _Lane:
     """Host-side open-system bookkeeping for one cell (device holds the
     pool state; this mirror holds the queue, credits, and arrival times)."""
 
-    def __init__(self, cell: ServeCell):
+    def __init__(self, cell: ServeCell, keep_responses: bool = False):
         self.cell = cell
         self.arr = cell.schedule.times
         self.ptr = 0                            # next unadmitted arrival
@@ -210,7 +246,13 @@ class _Lane:
         self.txn = np.zeros(cell.n_threads, dtype=np.int64)
         self.arrived = self.rejected = self.shed = 0
         self.dispatched = self.completed = self.sla_miss = 0
-        self.resp_us: list[float] = []
+        # whole-run response accounting is histogram-based (device log
+        # buckets + exact sum/max) so memory is O(N_HIST), not
+        # O(completions); the raw list is opt-in for parity tests
+        self.resp_hist = jnp.zeros((N_HIST,), I32)
+        self.resp_sum_ticks = 0
+        self.resp_max_ticks = 0
+        self.resp_us: list[float] | None = [] if keep_responses else None
         self.history: list[SegmentRecord] = []
         self.records: list[ServingRecord] = []
         self.g_prev = None                      # host Globals snapshot
@@ -267,17 +309,25 @@ class _Lane:
         """Match per-thread txn deltas to assigned arrivals, FIFO."""
         c = self.cell
         window: list[float] = []
+        rts: list[int] = []
         for t in range(c.n_threads):
             d = int(txn_now[t]) - int(self.txn[t])
             assert 0 <= d <= len(self.assigned[t]), (
                 f"cell {c.name!r} slot {t}: {d} completions vs "
                 f"{len(self.assigned[t])} assigned — credit ledger broken")
             for _ in range(d):
-                resp = (t1 - self.assigned[t].popleft()) / 10.0  # ticks->us
+                rt = t1 - self.assigned[t].popleft()       # ticks, exact
+                rts.append(rt)
+                resp = rt / 10.0                           # -> us
                 window.append(resp)
-                self.resp_us.append(resp)
+                if self.resp_us is not None:
+                    self.resp_us.append(resp)
                 if c.sla_us > 0 and resp > c.sla_us:
                     self.sla_miss += 1
+        if rts:
+            self.resp_hist = _resp_hist_update(self.resp_hist, rts)
+            self.resp_sum_ticks += sum(rts)
+            self.resp_max_ticks = max(self.resp_max_ticks, max(rts))
         self.txn = txn_now.astype(np.int64)
         self.completed += len(window)
         return len(window), window
@@ -332,6 +382,7 @@ def _revive(packed, width: int, rows: np.ndarray):
 
 def serve(cells: Iterable[ServeCell], *, seg_ticks: int,
           chunk_size: int | None = None, return_states: bool = False,
+          keep_responses: bool = False,
           verbose: bool = False) -> ServeResults:
     """Serve every cell's arrival schedule over its horizon.
 
@@ -343,7 +394,11 @@ def serve(cells: Iterable[ServeCell], *, seg_ticks: int,
     host round-trips; DESIGN.md §10 discusses the quantization.
 
     Returns :class:`ServeResults`: SweepResults-compatible (metrics /
-    segments / store) plus ``serving[name]`` summaries.
+    segments / store) plus ``serving[name]`` summaries. Whole-run
+    percentiles (p50/p99/p999) come from the device-side log-bucket
+    response histogram (memory O(N_HIST) regardless of horizon);
+    ``keep_responses=True`` additionally keeps every raw response in
+    ``ServeResults.responses[name]`` for parity checks.
     """
     cells = list(cells)
     assert cells and seg_ticks >= 1
@@ -370,6 +425,7 @@ def serve(cells: Iterable[ServeCell], *, seg_ticks: int,
     metrics, wall_us, segments = {}, {}, {}
     serving: dict[str, ServingResult] = {}
     states_out: dict[str, object] = {}
+    responses_out: dict[str, list] = {}
     infos: list[BucketInfo] = []
     compiles0 = _seg_compiles()
     t_start = time.perf_counter()
@@ -380,7 +436,7 @@ def serve(cells: Iterable[ServeCell], *, seg_ticks: int,
         G = len(bcells)
         t_bucket = time.perf_counter()
 
-        lanes = [_Lane(c) for c in bcells]
+        lanes = [_Lane(c, keep_responses) for c in bcells]
         for c in bcells:
             if c.policy is not None:
                 c.policy.reset(c.n_threads)
@@ -477,7 +533,9 @@ def serve(cells: Iterable[ServeCell], *, seg_ticks: int,
                         max_qlen=int(snap.max_qlen),
                         n_hot=int(snap.n_hot),
                         n_live=int(snap.n_live),
-                        n_waiting=int(snap.n_waiting)))
+                        n_waiting=int(snap.n_waiting),
+                        wait_hist=tuple(int(v) for v in snap.wait_hist),
+                        occ_hist=tuple(int(v) for v in snap.occ_hist)))
                     ln.records.append(ServingRecord(
                         index=k, t0=t0, t1=t1, preset=p, metrics=r,
                         arrived=n_arr, rejected=n_rej, shed=n_shed,
@@ -506,6 +564,18 @@ def serve(cells: Iterable[ServeCell], *, seg_ticks: int,
             wall_us[c.name] = wall_b * 1e6 / G
             segments[c.name] = [rec.as_json() for rec in ln.records]
             sim_s = horizon / TICKS_PER_SEC
+            # whole-run percentiles from the device histogram: bucket
+            # midpoints, clamped to the exact observed max so
+            # p50 <= p99 <= p999 <= max holds regardless of bucket edges
+            hist_np = np.asarray(ln.resp_hist)
+            assert int(hist_np.sum()) == ln.completed, (
+                f"cell {c.name!r}: response histogram holds "
+                f"{int(hist_np.sum())} responses, lane completed "
+                f"{ln.completed}")
+            max_us = ln.resp_max_ticks / 10.0
+            pct = lambda q: min(_pct_from_hist(hist_np, q), max_us)
+            if keep_responses:
+                responses_out[c.name] = list(ln.resp_us)
             serving[c.name] = ServingResult(
                 name=c.name, label=c.label(),
                 schedule=c.schedule.meta(),
@@ -515,12 +585,12 @@ def serve(cells: Iterable[ServeCell], *, seg_ticks: int,
                 arrived=ln.arrived, rejected=ln.rejected, shed=ln.shed,
                 dispatched=ln.dispatched, completed=ln.completed,
                 qlen_end=len(ln.queue), in_flight_end=ln.in_flight,
-                mean_resp_us=(float(np.mean(ln.resp_us))
-                              if ln.resp_us else 0.0),
-                p50_us=_pctl(ln.resp_us, 50.0),
-                p99_us=_pctl(ln.resp_us, 99.0),
-                p999_us=_pctl(ln.resp_us, 99.9),
-                max_us=max(ln.resp_us, default=0.0),
+                mean_resp_us=(ln.resp_sum_ticks / ln.completed / 10.0
+                              if ln.completed else 0.0),
+                p50_us=pct(0.50),
+                p99_us=pct(0.99),
+                p999_us=pct(0.999),
+                max_us=max_us,
                 sla_us=c.sla_us, sla_miss=ln.sla_miss,
                 sla_miss_frac=(ln.sla_miss / ln.completed
                                if c.sla_us > 0 and ln.completed else 0.0),
@@ -541,4 +611,4 @@ def serve(cells: Iterable[ServeCell], *, seg_ticks: int,
         points=points, metrics=metrics, wall_us=wall_us, buckets=infos,
         n_compiles=_seg_compiles() - compiles0,
         wall_s=time.perf_counter() - t_start, segments=segments,
-        serving=serving, states=states_out)
+        serving=serving, states=states_out, responses=responses_out)

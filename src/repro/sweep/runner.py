@@ -160,7 +160,7 @@ class SweepResults:
     ``segments`` is the optional per-point time series (one JSON-ready
     record per engine segment) that governed runs (``repro.adaptive``)
     attach; plain sweeps leave it empty. The store writes it under the
-    ``repro.sweep/v2`` schema.
+    ``repro.sweep/v3`` schema.
     """
     points: list[SweepPoint]
     metrics: dict[str, SimResult]       # name -> extracted metrics

@@ -19,6 +19,13 @@ Compaction-scheduler runs additionally carry their accounting in the
 iterations summed over device calls — the modeled lockstep cost), and
 ``repack_log`` (one ``[n_live, width, max_delta_iters]`` triple per
 device call). Sort-then-cut runs write zeros / an empty log.
+
+Schema ``repro.sweep/v3`` (obs layer, additive like v2): point
+``metrics`` gain the TickBreakdown attribution (``breakdown`` /
+``breakdown_hot`` tick dicts, conservation: values sum to padded-T x
+elapsed ticks), and segment records gain per-window ``breakdown`` plus
+end-of-segment ``wait_hist`` / ``occ_hist`` log2-bucket distribution
+histograms. v1/v2 documents still load.
 """
 from __future__ import annotations
 
@@ -30,8 +37,8 @@ from typing import Any
 
 from .runner import SweepResults
 
-SCHEMA = "repro.sweep/v2"
-SCHEMAS_READABLE = ("repro.sweep/v1", "repro.sweep/v2")
+SCHEMA = "repro.sweep/v3"
+SCHEMAS_READABLE = ("repro.sweep/v1", "repro.sweep/v2", "repro.sweep/v3")
 
 
 def point_record(res: SweepResults, name: str,

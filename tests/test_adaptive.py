@@ -373,7 +373,7 @@ class TestRunGoverned:
             run_governed(cells, horizon=1000, n_segments=2)
 
 
-class TestStoreV2:
+class TestStoreV3:
     def test_roundtrip_with_segments(self, tmp_path):
         drift = stationary(ZIPF, 3)
         res = run_governed(
@@ -382,17 +382,27 @@ class TestStoreV2:
         path = os.path.join(tmp_path, "gov.json")
         save_results(path, res, meta={"tag": "t"})
         doc = load_results(path)
-        assert doc["schema"] == "repro.sweep/v2"
+        assert doc["schema"] == "repro.sweep/v3"
         rec = doc["points"][0]
         assert len(rec["segments"]) == 3
         assert rec["segments"][0]["preset"] == "o2"
         assert rec["metrics"]["commits"] == res["cell"].commits
+        # v3 additions: per-window breakdown conserves to pad_T * window,
+        # distribution histograms count every row / every hot row
+        pad_t = 64      # MIN_T_BUCKET pads the 8 threads up
+        for seg in rec["segments"]:
+            bd = seg["breakdown"]
+            assert set(bd) == set(E.TB_NAMES)
+            assert sum(bd.values()) == pad_t * (seg["t1"] - seg["t0"])
+            assert sum(seg["wait_hist"]) == ZIPF.n_rows
+            assert sum(seg["occ_hist"]) == seg["n_hot"]
 
-    def test_v1_documents_still_load(self, tmp_path):
-        path = os.path.join(tmp_path, "v1.json")
-        with open(path, "w") as f:
-            json.dump({"schema": "repro.sweep/v1", "points": []}, f)
-        assert load_results(path)["schema"] == "repro.sweep/v1"
+    def test_v1_v2_documents_still_load(self, tmp_path):
+        for old in ("repro.sweep/v1", "repro.sweep/v2"):
+            path = os.path.join(tmp_path, old.replace("/", "_") + ".json")
+            with open(path, "w") as f:
+                json.dump({"schema": old, "points": []}, f)
+            assert load_results(path)["schema"] == old
 
     def test_foreign_json_rejected(self, tmp_path):
         path = os.path.join(tmp_path, "x.json")

@@ -315,6 +315,52 @@ class TestProperties:
 
 
 # ---------------------------------------------------------------------------
+# device-histogram percentiles vs host response lists (obs layer)
+# ---------------------------------------------------------------------------
+
+class TestDevicePercentiles:
+    """ServingResult p50/p99/p999 now come from the engine's log-bucket
+    response histogram, not a host-side list. ``keep_responses=True``
+    retains the old per-request list purely so this test can check the
+    two agree to within the histogram's bucket resolution."""
+
+    def test_hist_percentiles_match_host_responses(self):
+        # ~70% of M/M/c capacity on the contention-free workload: busy
+        # enough for a wide queueing-delay spread, light enough that most
+        # arrivals complete inside the horizon (a contended workload here
+        # would collapse and leave too few samples for p999)
+        rate = 0.7 * 8 / service_ticks(W_MMC, CostModel(), "o2")
+        sched = poisson(rate, 120_000, seed=SEED)
+        cells = [ServeCell(name="x", schedule=sched, workload=W_MMC,
+                           n_threads=8, preset="o2", admission="wait",
+                           max_outstanding=5_000)]
+        res = serve(cells, seg_ticks=20_000, keep_responses=True)
+        s = res.serving["x"]
+        rs = np.sort(np.asarray(res.responses["x"]))
+        assert len(rs) == s.completed > 100
+        assert s.max_us == pytest.approx(rs[-1])
+        # log buckets are base-1.3 wide and report the geometric
+        # midpoint, so the device estimate sits within ~sqrt(1.3) of the
+        # exact order statistic (inverted CDF), plus the -1 tick offset
+        # of the smallest buckets
+        for q, got in ((0.50, s.p50_us), (0.99, s.p99_us),
+                       (0.999, s.p999_us)):
+            k = min(int(np.ceil(q * len(rs))) - 1, len(rs) - 1)
+            want = rs[max(k, 0)]
+            assert want / 1.35 - 0.5 <= got <= want * 1.35 + 0.5, (
+                q, got, want)
+
+    def test_keep_responses_off_by_default(self):
+        rate = 0.5 * 4 / service_ticks(W_MMC, CostModel(), "o2")
+        cells = [ServeCell(name="x", schedule=poisson(rate, 30_000,
+                                                      seed=SEED),
+                           workload=W_MMC, n_threads=4, preset="o2",
+                           admission="wait", max_outstanding=500)]
+        res = serve(cells, seg_ticks=10_000)
+        assert res.responses == {}
+
+
+# ---------------------------------------------------------------------------
 # governed serving
 # ---------------------------------------------------------------------------
 
