@@ -1,0 +1,168 @@
+"""CI perf-regression gate: diff a fresh BENCH_run.json vs the baseline.
+
+The committed ``BENCH_run.json`` is the repo's perf trajectory; this
+gate makes it self-enforcing. A fresh quick run (usually one smoke job's
+``--only figNN``) is compared per module against the committed baseline:
+
+* **wall**: fail when ``fresh > baseline * wall_ratio + wall_slack_s``.
+  The default (1.5x + 5s) is deliberately loose — CI runners are shared
+  and 1-core; the gate exists to catch 2x-class regressions (a recompile
+  in a loop, an accidental un-vmapped sweep), not 10% noise. Speedups
+  never fail; they're reported so the baseline gets re-committed.
+* **compiles**: exact equality, but only between entries with the same
+  ``scope`` marker (compile counts depend on what ran earlier in the
+  process — a ``--only`` run and a full-suite run see different caches).
+  A compile-count increase at equal scope is exactly the "param promoted
+  into the compile key" regression this repo keeps hunting.
+* **errors**: a fresh module entry carrying ``error`` always fails.
+* **coverage**: modules only in the fresh doc are allowed (new
+  benchmarks); modules only in the baseline are noted, not failed (smoke
+  jobs legitimately run subsets) — unless ``--modules`` names them.
+* **quick/full**: wall is only compared between like modes.
+
+``compile_time_s`` deltas are reported (the compile-time attack's
+ledger) but never gate — backend compile wall is too host-dependent.
+
+Re-baselining: when a slowdown is real and accepted (new feature, wider
+coverage), re-run ``python -m benchmarks.run --only MOD --json
+BENCH_run.json`` and commit the refreshed file — the PR diff then shows
+the regression as a reviewed number instead of a silent drift
+(DESIGN.md §12).
+
+Exit code 0 = gate passed; 1 = regression/failure; 2 = usage error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+WALL_RATIO = 1.5
+WALL_SLACK_S = 5.0
+
+
+def _fmt(x: float) -> str:
+    return f"{x:.1f}"
+
+
+def compare(baseline: dict, fresh: dict, *, wall_ratio: float = WALL_RATIO,
+            wall_slack_s: float = WALL_SLACK_S, modules=None,
+            compile_exact: bool = True) -> tuple[bool, list[str]]:
+    """Gate ``fresh`` against ``baseline``. Returns (ok, report_lines).
+
+    ``modules``: optional iterable restricting which module names gate
+    (others still get informational lines). Every failure line starts
+    with ``FAIL``; the gate fails iff any does.
+    """
+    want = set(modules) if modules else None
+    base_mods = baseline.get("modules", {})
+    fresh_mods = fresh.get("modules", {})
+    lines: list[str] = []
+    ok = True
+
+    def fail(msg: str) -> None:
+        nonlocal ok
+        ok = False
+        lines.append(f"FAIL {msg}")
+
+    names = sorted(set(base_mods) | set(fresh_mods))
+    for name in names:
+        gated = want is None or name in want
+        b, f = base_mods.get(name), fresh_mods.get(name)
+        if f is None:
+            if want and name in want:
+                fail(f"{name}: requested module missing from fresh run")
+            else:
+                lines.append(f"note {name}: not in fresh run (subset ok)")
+            continue
+        if b is None:
+            lines.append(f"note {name}: new module (no baseline) "
+                         f"wall={_fmt(f.get('wall_s', 0.0))}s")
+            continue
+        if f.get("error"):
+            (fail if gated else lines.append)(
+                f"{name}: fresh run errored: {f['error']}")
+            continue
+        if b.get("error"):
+            lines.append(f"note {name}: baseline errored; skipping compare")
+            continue
+
+        bw, fw = b.get("wall_s", 0.0), f.get("wall_s", 0.0)
+        if b.get("quick") != f.get("quick"):
+            lines.append(f"note {name}: quick/full mode mismatch; "
+                         f"wall not compared")
+        else:
+            limit = bw * wall_ratio + wall_slack_s
+            if fw > limit and gated:
+                fail(f"{name}: wall {_fmt(fw)}s > limit {_fmt(limit)}s "
+                     f"(baseline {_fmt(bw)}s x{wall_ratio} + "
+                     f"{_fmt(wall_slack_s)}s)")
+            elif fw < bw / wall_ratio - wall_slack_s:
+                lines.append(f"note {name}: speedup {_fmt(bw)}s -> "
+                             f"{_fmt(fw)}s — consider re-baselining")
+            else:
+                lines.append(f"ok   {name}: wall {_fmt(fw)}s "
+                             f"(baseline {_fmt(bw)}s)")
+
+        bc, fc = b.get("compiles"), f.get("compiles")
+        same_scope = b.get("scope") is not None \
+            and b.get("scope") == f.get("scope") \
+            and b.get("quick") == f.get("quick")
+        if not compile_exact or bc is None or fc is None:
+            pass
+        elif not same_scope:
+            why = "no scope marker in baseline" if b.get("scope") is None \
+                else f"scope mismatch ({b.get('scope')} vs {f.get('scope')})"
+            lines.append(f"note {name}: {why}; compile count not compared")
+        elif fc != bc:
+            (fail if gated else lines.append)(
+                f"{name}: compiles {fc} != baseline {bc} "
+                f"(recompile regression?)")
+        bt, ft = b.get("compile_time_s"), f.get("compile_time_s")
+        if bt is not None and ft is not None:
+            lines.append(f"info {name}: compile_time_s "
+                         f"{_fmt(ft)} (baseline {_fmt(bt)})")
+    lines.append("gate: " + ("PASS" if ok else "FAIL"))
+    return ok, lines
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", required=True,
+                    help="committed BENCH_run.json")
+    ap.add_argument("--fresh", required=True,
+                    help="BENCH_run.json from this run")
+    ap.add_argument("--modules", default=None,
+                    help="comma-separated module names to gate "
+                         "(others informational)")
+    ap.add_argument("--wall-ratio", type=float, default=WALL_RATIO)
+    ap.add_argument("--wall-slack", type=float, default=WALL_SLACK_S)
+    ap.add_argument("--no-compile-exact", action="store_true",
+                    help="skip the exact compile-count check")
+    ap.add_argument("--report", default=None,
+                    help="also write the report to this path (CI artifact)")
+    args = ap.parse_args(argv)
+
+    try:
+        with open(args.baseline) as fp:
+            baseline = json.load(fp)
+        with open(args.fresh) as fp:
+            fresh = json.load(fp)
+    except (OSError, ValueError) as e:
+        print(f"perf_gate: cannot load inputs: {e}", file=sys.stderr)
+        return 2
+
+    mods = [m for m in (args.modules or "").split(",") if m] or None
+    ok, lines = compare(baseline, fresh, wall_ratio=args.wall_ratio,
+                        wall_slack_s=args.wall_slack, modules=mods,
+                        compile_exact=not args.no_compile_exact)
+    report = "\n".join(lines)
+    print(report)
+    if args.report:
+        with open(args.report, "w") as fp:
+            fp.write(report + "\n")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,57 @@
+"""Per-stage step profiler: what the future Pallas kernel must fuse.
+
+One row per (protocol, T, L): ranked stage fractions of the engine
+step's per-iteration wall cost, measured by stage ablation
+(``repro.obs.prof``, DESIGN.md §12). The point of the table is the
+``dominant=`` column — on the paper's hotspot shape the T×L scan work
+(commit-cursor segment reductions + dup analysis) is where the iteration
+goes, which is exactly the fusion target the ROADMAP's "Pallas-kernel
+the engine hot path" item needs named before any kernel is written.
+
+Rows also carry ``compile_s``/``hlo_bytes`` for the full-step executable
+(via ``obs.compile_log`` telemetry) so BENCH_run.json tracks compile
+cost next to runtime cost per profiled shape.
+"""
+import time
+
+from .common import emit
+from repro.core.lock import CostModel, EngineConfig, WorkloadSpec, \
+    protocol_params
+from repro.obs import compile_log
+from repro.obs.prof import profile_row, profile_step, rank_table
+
+HOT = WorkloadSpec(kind="hotspot_update", txn_len=4, n_rows=512)
+
+# (protocol, n_threads) grid; quick mode keeps it to the acceptance pair
+GRID_QUICK = (("mysql", 64), ("brook2pl", 64))
+GRID_FULL = (("mysql", 64), ("mysql", 256),
+             ("brook2pl", 64), ("brook2pl", 256),
+             ("o2", 256))
+
+
+def _cfg(proto: str, threads: int) -> EngineConfig:
+    return EngineConfig(protocol=protocol_params(proto), costs=CostModel(),
+                        workload=HOT, n_threads=threads, horizon=2_000_000)
+
+
+def run(quick=True):
+    grid = GRID_QUICK if quick else GRID_FULL
+    n_iters = 128 if quick else 512
+    repeats = 3 if quick else 5
+    rows = []
+    for proto, threads in grid:
+        tele0 = compile_log.snapshot()
+        t0 = time.perf_counter()
+        prof = profile_step(_cfg(proto, threads), n_iters=n_iters,
+                            repeats=repeats)
+        wall_s = time.perf_counter() - t0
+        tele = compile_log.delta(tele0)
+        print(f"# {rank_table(prof).replace(chr(10), chr(10) + '# ')}")
+        row = profile_row(f"profile_{proto}_T{threads}", prof)
+        rows.append(f"{row};compile_s={tele['compile_time_s']:.2f};"
+                    f"profile_wall_s={wall_s:.2f}")
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run(quick=True)

@@ -2,10 +2,12 @@
 
 Prints ``name,us_per_call,derived`` CSV. ``--full`` widens sweeps;
 ``--only fig08`` runs one module; ``--json PATH`` additionally writes the
-parsed rows, per-module wall times, and per-module sweep accounting
-(compiles, vmapped lane-iterations, compaction repack counts) as
+parsed rows, per-module wall times, compile telemetry (jit-cache deltas,
+XLA compile seconds, the slowest compiled functions), and per-module
+sweep accounting (vmapped lane-iterations, compaction repack counts) as
 machine-readable JSON so the perf trajectory is tracked across PRs —
-the committed ``BENCH_run.json`` is the current quick-mode baseline.
+the committed ``BENCH_run.json`` is the current quick-mode baseline, and
+``benchmarks/perf_gate.py`` enforces it in CI.
 """
 import argparse
 import json
@@ -54,6 +56,39 @@ def _parse_row(row: str) -> dict:
     return rec
 
 
+def _top_fns(fns: dict, k: int = 5) -> dict:
+    """Slowest-compiling functions from a telemetry delta (bounded)."""
+    ranked = sorted(fns.items(), key=lambda kv: -kv[1]["secs"])
+    return {name: rec for name, rec in ranked[:k]}
+
+
+def merge_only_doc(doc: dict, path: str) -> tuple[dict, str | None]:
+    """Merge a ``--only`` run's doc into the baseline JSON at ``path``.
+
+    A single-module run refreshes that module's entry INSIDE the existing
+    baseline instead of replacing the whole document — the CI smoke jobs
+    each run ``--only figNN --json BENCH_run.json`` and must not wipe the
+    other modules' perf trajectory. ``total_wall_s`` becomes the sum of
+    module walls (the only consistent meaning for a merged doc).
+
+    Returns ``(doc_to_write, note)``; ``note`` is non-None when the
+    baseline was unusable (corrupt/foreign) — the caller prints it so the
+    CI log says loudly that the trajectory was overwritten, not silently.
+    A missing baseline is the normal fresh-file case: no note.
+    """
+    try:
+        with open(path) as f:
+            prev = json.load(f)
+        prev["modules"].update(doc["modules"])
+        prev["total_wall_s"] = sum(
+            m.get("wall_s", 0.0) for m in prev["modules"].values())
+        return prev, None
+    except FileNotFoundError:
+        return doc, None        # fresh file: write this run alone
+    except (OSError, ValueError, KeyError, TypeError, AttributeError) as e:
+        return doc, f"merge_skipped={type(e).__name__}: {e}"
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
@@ -67,8 +102,10 @@ def main() -> None:
                    fig06_ablation, fig07_mix, fig08_scalability, fig09_sync,
                    fig10_abort_skew, fig12_tpcc, fig13_batch, fig14_recovery,
                    fig15_adaptive, fig16_brook, fig17_serving,
-                   fig18_waitprofile, kernel_bench, roofline_table)
+                   fig18_waitprofile, kernel_bench, profile_step,
+                   roofline_table)
     from repro.obs import compile_log
+    compile_log.enable_telemetry()
     modules = {
         "fig02": fig02_motivation, "fig06": fig06_ablation,
         "fig07": fig07_mix, "fig08": fig08_scalability,
@@ -79,9 +116,14 @@ def main() -> None:
         "fig18": fig18_waitprofile,
         "compaction": compaction_bench,
         "kernels": kernel_bench, "roofline": roofline_table,
+        "profile": profile_step,
     }
     if args.only:
         modules = {args.only: modules[args.only]}
+    # per-module compile counts depend on what ran before (cache entries
+    # are created in run order) — the scope marker lets perf_gate.py
+    # compare compile counts exactly only between like-scoped entries
+    scope = f"only:{args.only}" if args.only else "suite"
 
     print("name,us_per_call,derived")
     doc = {"quick": quick, "modules": {}}
@@ -93,32 +135,44 @@ def main() -> None:
         # compile accounting spans every jitted entry point (engine, aria,
         # traced runner, registered extras) — the sweep stats only see the
         # sweep substrate, so this is the whole-process truth per module
-        compiles0 = compile_log.total_compiles()
+        tele0 = compile_log.snapshot()
         try:
             rows = mod.run(quick=quick) or []
         except Exception as e:  # keep the harness going
             print(f"{name}_ERROR,0,{type(e).__name__}:{e}")
             common.pop_sweep_stats()    # drop partial accounting
+            tele = compile_log.delta(tele0)
             doc["modules"][name] = {
                 "wall_s": time.time() - tm,
-                "compiles": compile_log.total_compiles() - compiles0,
+                "compiles": tele["compiles"],
+                "compile_time_s": tele["compile_time_s"],
+                "backend_compiles": tele["backend_compiles"],
                 "peak_rss_mb": _peak_rss_mb(),
+                "scope": scope,
                 "error": f"{type(e).__name__}: {e}",
                 "rows": [],
             }
             continue
         sweeps = common.pop_sweep_stats()
+        tele = compile_log.delta(tele0)
         # per-module quick marker: a merged doc (--only into an existing
         # baseline, below) can mix modes, so the top-level flag alone
         # cannot be trusted for cross-commit comparisons
         doc["modules"][name] = {
             "wall_s": time.time() - tm,
             "quick": quick,
-            "compiles": compile_log.total_compiles() - compiles0,
+            "compiles": tele["compiles"],
+            # wall seconds inside XLA backend compilation during this
+            # module, and the slowest compiled functions it paid for —
+            # the compile-time attack's per-module ledger
+            "compile_time_s": tele["compile_time_s"],
+            "backend_compiles": tele["backend_compiles"],
+            "compiled_fns": _top_fns(tele["fns"]),
             # ru_maxrss is a process-lifetime high-water mark, so this is
             # monotone across modules in one run — compare same-position
             # or --only runs across commits, not adjacent modules
             "peak_rss_mb": _peak_rss_mb(),
+            "scope": scope,
             "rows": [_parse_row(r) for r in rows],
             "sweeps": sweeps,
         }
@@ -133,27 +187,12 @@ def main() -> None:
     if args.json:
         out = doc
         if args.only:
-            # a single-module run refreshes that module's entry INSIDE an
-            # existing baseline instead of replacing the whole document —
-            # the CI smoke jobs each run `--only figNN --json
-            # BENCH_run.json` and must not wipe the other modules' perf
-            # trajectory. total_wall_s becomes the sum of module walls
-            # (the only consistent meaning for a merged doc).
-            try:
-                with open(args.json) as f:
-                    prev = json.load(f)
-                prev["modules"].update(doc["modules"])
-                prev["total_wall_s"] = sum(
-                    m.get("wall_s", 0.0) for m in prev["modules"].values())
-                out = prev
-            except FileNotFoundError:
-                pass        # fresh file: write this run alone
-            except (OSError, ValueError, KeyError, TypeError,
-                    AttributeError) as e:
+            out, note = merge_only_doc(doc, args.json)
+            if note:
                 # corrupt/foreign baseline: overwriting loses the other
                 # modules' trajectory — say so loudly in the output the
                 # CI log keeps, rather than wiping it silently
-                print(f"# merge_skipped={type(e).__name__}: {e}")
+                print(f"# {note}")
         with open(args.json, "w") as f:
             json.dump(out, f, indent=1)
             f.write("\n")

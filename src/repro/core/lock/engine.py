@@ -106,6 +106,25 @@ _TB_PHASE_BIN = np.array(
 # bucket b>=1 = count in [2**(b-1), 2**b). 12 buckets cover queues of 2k+.
 N_QHIST = 12
 
+# --- stage ablation (profiler seam, DESIGN.md §12) -----------------------
+# ``_make_step_events(..., ablate={stage})`` replaces one named stage's
+# compute with a shape-correct stand-in so XLA dead-code-eliminates the
+# stage from the compiled program; the per-stage step profiler
+# (``repro.obs.prof``) attributes per-iteration wall cost by differencing
+# against the full step. Each ablation is the exact identity on the step
+# whenever the stage's work is trivially absent (protocol flag off,
+# read-only workload, txn_len 1 — asserted bit-exactly in
+# tests/test_prof.py), and ``ablate=frozenset()`` (every production entry
+# point) emits the identical program as before the seam existed.
+PROF_STAGES = (
+    "dup_analysis",    # gen_txn_dyn's (T,L,L) pairwise dup/last-use scan
+    "deadlock_walk",   # the 8-hop waits-for cycle walk (stage 1b)
+    "ticket_grant",    # grant-rule masks (4a) + FIFO ticket argsort (8)
+    "commit_cursor",   # _derive: cc/top/us/holder T*L -> R seg reductions
+    "group_hotspot",   # group-lock / group-commit / hotspot-detect conds
+    "tick_charge",     # TickBreakdown scatter charging (stage 5)
+)
+
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
@@ -322,9 +341,18 @@ class Derived(NamedTuple):
 
 
 def _derive(stat: StaticShape, dp: DynParams, th: Threads,
-            rows: Rows) -> Derived:
+            rows: Rows, ablate: frozenset = frozenset()) -> Derived:
     R = stat.n_rows
     T, L = th.keys.shape
+    if "commit_cursor" in ablate:
+        # profiler stand-in (DESIGN.md §12): every aggregate at its
+        # no-live-ticket value — exact identity on read-only workloads,
+        # DCEs the T*L -> R segment reductions otherwise.
+        return Derived(
+            us=rows.nt, cc=rows.nt, top=jnp.full((R,), NOTK),
+            holder=jnp.full((R,), NOTK),
+            n_wait=jnp.zeros((R,), I32), n_live=jnp.zeros((R,), I32),
+            hotof=jnp.full((T,), NOTK), napp=jnp.zeros((T,), I32))
     live = th.ticket >= 0                                    # (T, L)
     keyf = th.keys
 
@@ -397,10 +425,17 @@ class StepEvents(NamedTuple):
     wait_enter: jnp.ndarray  # (T,) bool took a ticket, entered WAIT
 
 
-def _make_step_events(stat: StaticShape, dp: DynParams, until=None):
+def _make_step_events(stat: StaticShape, dp: DynParams, until=None,
+                      ablate: frozenset = frozenset()):
     """Build the tick-step function. ``stat`` is static (shapes + kind);
     every parameter in ``dp`` is traced, so protocol branches are computed
     unconditionally and masked — the price of one program for all configs.
+
+    ``ablate`` (static, profiler-only — see :data:`PROF_STAGES` and
+    ``repro.obs.prof``) names stages whose compute is replaced by a
+    shape-correct stand-in so XLA eliminates them from the program. The
+    default empty set takes the exact code path that existed before the
+    seam — production entry points never pass it.
 
     ``until`` (traced, segmented mode) caps the *idle* time advance at
     the segment boundary: when no thread is paying work (a pure wait
@@ -423,6 +458,8 @@ def _make_step_events(stat: StaticShape, dp: DynParams, until=None):
     T = stat.n_threads
     R = stat.n_rows
     L = stat.txn_len
+    ablate = frozenset(ablate)
+    assert ablate <= set(PROF_STAGES), sorted(ablate - set(PROF_STAGES))
     tids = jnp.arange(T, dtype=I32)
     tb_bin = jnp.asarray(_TB_PHASE_BIN)
     stop_time = _stop_time(dp)
@@ -435,7 +472,8 @@ def _make_step_events(stat: StaticShape, dp: DynParams, until=None):
 
     def step(s: SimState) -> tuple[SimState, StepEvents]:
         th, rows, g = s
-        d = _derive(stat, dp, th, rows)
+        with jax.named_scope("stage_derive"):
+            d = _derive(stat, dp, th, rows, ablate)
         now = g.now
 
         cur_key = cur(th.keys, th.op)
@@ -471,9 +509,14 @@ def _make_step_events(stat: StaticShape, dp: DynParams, until=None):
                                  succ[wi], NOTK)
             return on_cycle & (tids == mx)
 
-        victim = lax.cond(dp.has_detection, _walk_cycle,
-                          lambda op: jnp.zeros_like(op[0]),
-                          (in_wait, th.phase, d.holder[cur_key]))
+        if "deadlock_walk" in ablate:
+            # stand-in: no victims (identity when has_detection is False)
+            victim = jnp.zeros_like(in_wait)
+        else:
+            with jax.named_scope("stage_deadlock_walk"):
+                victim = lax.cond(dp.has_detection, _walk_cycle,
+                                  lambda op: jnp.zeros_like(op[0]),
+                                  (in_wait, th.phase, d.holder[cur_key]))
         forced = forced | victim
         # 1c. proactive hot+non-hot rollback (§4.5)
         hrow = d.hotof
@@ -517,9 +560,14 @@ def _make_step_events(stat: StaticShape, dp: DynParams, until=None):
         is_w = (th.phase == WAIT) & ~th.forced
         key_w = cur_key
         hot_w = rows.hot[key_w]
-        grantable = (is_w & (cur_tkt == d2.us[key_w])
-                     & ~rows.updating[key_w]
-                     & (rows.casc[key_w] == INF))
+        with jax.named_scope("stage_ticket_grant"):
+            grantable = (is_w & (cur_tkt == d2.us[key_w])
+                         & ~rows.updating[key_w]
+                         & (rows.casc[key_w] == INF))
+        if "ticket_grant" in ablate:
+            # stand-in: nothing grants (identity on read-only workloads,
+            # where no thread ever takes a ticket or enters WAIT)
+            grantable = jnp.zeros_like(grantable)
         # group locking: leader/follower bookkeeping
         open_leader = rows.gleader[key_w]
         is_leader_grant = (grantable & hot_w & (open_leader == NOTK)
@@ -572,8 +620,12 @@ def _make_step_events(stat: StaticShape, dp: DynParams, until=None):
             close = (gl != NOTK) & (closed_full | closed_dyn)
             return (jnp.where(close, NOTK, gl), jnp.where(close, 0, gc))
 
-        gl, gc = lax.cond(dp.group_lock, _glock_on, lambda op: op,
-                          (rows.gleader, rows.gcount))
+        if "group_hotspot" in ablate:
+            gl, gc = rows.gleader, rows.gcount     # forced off branch
+        else:
+            with jax.named_scope("stage_group_lock"):
+                gl, gc = lax.cond(dp.group_lock, _glock_on, lambda op: op,
+                                  (rows.gleader, rows.gcount))
         rows = rows._replace(gleader=gl, gcount=gc)
 
         # 4b. CWAIT -> COMMIT (commit order on early rows; leader hold)
@@ -622,9 +674,14 @@ def _make_step_events(stat: StaticShape, dp: DynParams, until=None):
         def _gcommit_off(op):
             return op[0], op[1], jnp.broadcast_to(base_cost, (T,))
 
-        nbe, nbn, cost = lax.cond(dp.group_commit & (dp.sync_lat > 0),
-                                  _gcommit_on, _gcommit_off,
-                                  (rows.batch_end, rows.batch_n))
+        if "group_hotspot" in ablate:
+            nbe, nbn, cost = _gcommit_off((rows.batch_end, rows.batch_n))
+        else:
+            with jax.named_scope("stage_group_commit"):
+                nbe, nbn, cost = lax.cond(dp.group_commit
+                                          & (dp.sync_lat > 0),
+                                          _gcommit_on, _gcommit_off,
+                                          (rows.batch_end, rows.batch_n))
         rows = rows._replace(batch_end=nbe, batch_n=nbn)
         th = th._replace(
             phase=jnp.where(can_commit, COMMIT,
@@ -688,14 +745,19 @@ def _make_step_events(stat: StaticShape, dp: DynParams, until=None):
         is_ex = th.phase == EXEC
         ddpay = jnp.where(is_ex, jnp.minimum(th.detleft, dt), 0)
         th = th._replace(detleft=th.detleft - ddpay)
-        engaged = ((th.phase == WAIT) | is_ex | (th.phase == CWAIT)
-                   | (th.phase == COMMIT))
-        branch = jnp.where(engaged & rows.hot[cur_key], 1, 0)
-        tbf = g.tb.reshape(-1)
-        tbf = tbf.at[branch * N_TB + tb_bin[th.phase]].add(
-            jnp.where(is_ex, dt - ddpay, dt))
-        tbf = tbf.at[branch * N_TB + TB_DETECT].add(ddpay)
-        g = g._replace(tb=tbf.reshape(g.tb.shape))
+        if "tick_charge" in ablate:
+            pass    # stand-in: tb untouched — every other leaf (incl.
+            #         detleft above) evolves bit-exactly on ANY config
+        else:
+            with jax.named_scope("stage_tick_charge"):
+                engaged = ((th.phase == WAIT) | is_ex
+                           | (th.phase == CWAIT) | (th.phase == COMMIT))
+                branch = jnp.where(engaged & rows.hot[cur_key], 1, 0)
+                tbf = g.tb.reshape(-1)
+                tbf = tbf.at[branch * N_TB + tb_bin[th.phase]].add(
+                    jnp.where(is_ex, dt - ddpay, dt))
+                tbf = tbf.at[branch * N_TB + TB_DETECT].add(ddpay)
+                g = g._replace(tb=tbf.reshape(g.tb.shape))
 
         done = paying & (work <= 0)
 
@@ -827,9 +889,11 @@ def _make_step_events(stat: StaticShape, dp: DynParams, until=None):
             phase=jnp.where(early_t, ARRIVE, th.phase),
             work=jnp.where(early_t, arr - now, th.work))
         st = st & ~early_t
-        keys, iswr, dup, lastu, nops = gen_txn_dyn(
-            stat.kind, R, L, dp.wl, tids, th.txn,
-            acq_order=dp.ordered_acquire)
+        with jax.named_scope("stage_gen_txn"):
+            keys, iswr, dup, lastu, nops = gen_txn_dyn(
+                stat.kind, R, L, dp.wl, tids, th.txn,
+                acq_order=dp.ordered_acquire,
+                skip_analysis="dup_analysis" in ablate)
         wab = will_abort_dyn(dp.wl.seed, dp.p_abort, tids, th.txn)
         sel = st[:, None]
         th = th._replace(
@@ -860,17 +924,25 @@ def _make_step_events(stat: StaticShape, dp: DynParams, until=None):
         # FIFO ticket assignment with same-tick ranking (sort by key).
         # Sentinel key R sorts all non-takers after every real key so they
         # can never interleave (and break the rank chain) of a key run.
-        enc = jnp.where(need_ticket, bkey, I32(R)) * I32(T) + tids
-        order = jnp.argsort(enc)
-        sk = bkey[order]
-        sm = need_ticket[order]
-        same = jnp.concatenate([jnp.zeros((1,), bool),
-                                (sk[1:] == sk[:-1]) & sm[1:] & sm[:-1]])
-        idx = jnp.arange(T)
-        seg_start = jnp.where(~same, idx, 0)
-        seg_start = lax.associative_scan(jnp.maximum, seg_start)
-        rank_sorted = idx - seg_start
-        rank = jnp.zeros((T,), I32).at[order].set(rank_sorted.astype(I32))
+        if "ticket_grant" in ablate:
+            # stand-in: no same-tick ranking (exact when need_ticket is
+            # everywhere false — read-only workloads take no tickets)
+            rank = jnp.zeros((T,), I32)
+        else:
+            with jax.named_scope("stage_ticket_assign"):
+                enc = jnp.where(need_ticket, bkey, I32(R)) * I32(T) + tids
+                order = jnp.argsort(enc)
+                sk = bkey[order]
+                sm = need_ticket[order]
+                same = jnp.concatenate([
+                    jnp.zeros((1,), bool),
+                    (sk[1:] == sk[:-1]) & sm[1:] & sm[:-1]])
+                idx = jnp.arange(T)
+                seg_start = jnp.where(~same, idx, 0)
+                seg_start = lax.associative_scan(jnp.maximum, seg_start)
+                rank_sorted = idx - seg_start
+                rank = jnp.zeros((T,), I32).at[order].set(
+                    rank_sorted.astype(I32))
         tkt = jnp.where(need_ticket, rows.nt[bkey] + rank, NOTK)
         counts = _seg_sum(jnp.ones_like(bkey), bkey, R, need_ticket)
         rows = rows._replace(nt=rows.nt + counts)
@@ -897,9 +969,13 @@ def _make_step_events(stat: StaticShape, dp: DynParams, until=None):
                     jnp.where(demote, NOTK, gleader),
                     jnp.where(demote, 0, gcount))
 
-        hot, gleader, gcount = lax.cond(
-            dp.hot_queue, _hotspot_on, lambda op: op,
-            (rows.hot, rows.gleader, rows.gcount))
+        if "group_hotspot" in ablate:
+            hot, gleader, gcount = rows.hot, rows.gleader, rows.gcount
+        else:
+            with jax.named_scope("stage_hotspot_detect"):
+                hot, gleader, gcount = lax.cond(
+                    dp.hot_queue, _hotspot_on, lambda op: op,
+                    (rows.hot, rows.gleader, rows.gcount))
         rows = rows._replace(hot=hot, gleader=gleader, gcount=gcount)
 
         ev = StepEvents(
@@ -912,14 +988,16 @@ def _make_step_events(stat: StaticShape, dp: DynParams, until=None):
     return step
 
 
-def _make_step(stat: StaticShape, dp: DynParams, until=None):
+def _make_step(stat: StaticShape, dp: DynParams, until=None,
+               ablate: frozenset = frozenset()):
     """Classic step: :func:`_make_step_events` minus the event tuple.
 
     All non-traced entry points route through this wrapper; XLA DCEs the
     dropped event masks (they are aliases of values the step computes
-    anyway), so the split is free.
+    anyway), so the split is free. ``ablate`` is the profiler seam
+    (:data:`PROF_STAGES`) — production entry points leave it empty.
     """
-    step_events = _make_step_events(stat, dp, until=until)
+    step_events = _make_step_events(stat, dp, until=until, ablate=ablate)
     return lambda s: step_events(s)[0]
 
 

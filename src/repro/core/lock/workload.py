@@ -150,7 +150,8 @@ def zipf_cdf_table(n: int, s: float) -> jnp.ndarray:
 
 def gen_txn_dyn(kind: str, n_rows: int, L: int, dw: DynWorkload,
                 thread_ids: jnp.ndarray, txn_ctr: jnp.ndarray,
-                acq_order: jnp.ndarray | None = None):
+                acq_order: jnp.ndarray | None = None,
+                skip_analysis: bool = False):
     """Generate transaction programs for every thread (traceable params).
 
     Args:
@@ -166,6 +167,11 @@ def gen_txn_dyn(kind: str, n_rows: int, L: int, dw: DynWorkload,
          order (``dw.acq_rank``) BEFORE the dup/re-entrancy analysis, so
          Brook-2PL lanes acquire rows in one global order. False (or
          None) leaves programs bit-identical to the classic layout.
+      skip_analysis: static profiler seam (engine.PROF_STAGES
+         "dup_analysis"): replace the (T, L, L) pairwise dup/last-use
+         scan with its txn_len==1 closed form (dup never, every active
+         slot is its key's last use) — exact at L == 1, DCEs the
+         pairwise tensor otherwise. Production callers leave it False.
 
     Returns:
       keys:  (T, L) int32 row keys.
@@ -252,17 +258,21 @@ def gen_txn_dyn(kind: str, n_rows: int, L: int, dw: DynWorkload,
         keys, iswr = chop.apply_acquisition_order(
             dw.acq_rank, keys, iswr, dw.txn_len, acq_order)
 
-    # dup[i] = key i seen at an earlier slot (re-entrant lock).
-    eq = keys[:, :, None] == keys[:, None, :]            # (T, L, L)
-    earlier = jnp.tril(jnp.ones((L, L), dtype=bool), k=-1)[None]
-    dup = jnp.any(eq & earlier & iswr[:, None, :], axis=2) & iswr
-    # A read slot never takes a ticket; only writes matter for dup.
-
-    # lastu[i] = no LATER active slot touches key i (the per-op release
-    # point, == chop.last_use; derived here to reuse the eq tensor).
     active = slot < dw.txn_len                           # (1, L)
-    later = jnp.triu(jnp.ones((L, L), dtype=bool), k=1)[None]
-    lastu = active & ~jnp.any(eq & later & active[:, None, :], axis=2)
+    if skip_analysis:
+        dup = jnp.zeros_like(iswr)
+        lastu = jnp.broadcast_to(active, iswr.shape)
+    else:
+        # dup[i] = key i seen at an earlier slot (re-entrant lock).
+        eq = keys[:, :, None] == keys[:, None, :]        # (T, L, L)
+        earlier = jnp.tril(jnp.ones((L, L), dtype=bool), k=-1)[None]
+        dup = jnp.any(eq & earlier & iswr[:, None, :], axis=2) & iswr
+        # A read slot never takes a ticket; only writes matter for dup.
+
+        # lastu[i] = no LATER active slot touches key i (the per-op
+        # release point, == chop.last_use; reuses the eq tensor).
+        later = jnp.triu(jnp.ones((L, L), dtype=bool), k=1)[None]
+        lastu = active & ~jnp.any(eq & later & active[:, None, :], axis=2)
 
     nops = jnp.broadcast_to(dw.txn_len, (T,)).astype(I32)
     return keys.astype(I32), iswr, dup, lastu, nops

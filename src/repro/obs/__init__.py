@@ -13,12 +13,17 @@ Three parts (DESIGN.md §11):
 * **Export** (:mod:`.export`) — Chrome trace-event JSON (Perfetto) and
   text wait-profile / breakdown reports.
 
-:mod:`.compile_log` is the shared compile counter benchmarks use to put
-recompile regressions on the perf trajectory.
+:mod:`.compile_log` is the shared compile counter + compile-time
+telemetry benchmarks use to put recompile regressions on the perf
+trajectory; :mod:`.prof` is the stage-ablation step profiler
+(DESIGN.md §12) that attributes per-iteration wall cost to engine
+stages.
 """
-from . import breakdown, compile_log, export, trace
+from . import breakdown, compile_log, export, prof, trace
 from .breakdown import (breakdown_row, check_conservation, fractions,
                         tick_sum)
+from .prof import (STAGE_NOOPS, StageCost, StepProfile, profile_row,
+                   profile_step, rank_table)
 from .export import (breakdown_table, dump_chrome_trace, to_chrome_trace,
                      wait_profile)
 from .trace import (EVENTS, EV_COMMIT, EV_GRANT, EV_GROUP_JOIN, EV_RELEASE,
@@ -26,8 +31,10 @@ from .trace import (EVENTS, EV_COMMIT, EV_GRANT, EV_GROUP_JOIN, EV_RELEASE,
                     events_host, make_trace, run_traced, simulate_traced)
 
 __all__ = [
-    "breakdown", "compile_log", "export", "trace",
+    "breakdown", "compile_log", "export", "prof", "trace",
     "breakdown_row", "check_conservation", "fractions", "tick_sum",
+    "STAGE_NOOPS", "StageCost", "StepProfile", "profile_row",
+    "profile_step", "rank_table",
     "breakdown_table", "dump_chrome_trace", "to_chrome_trace",
     "wait_profile",
     "EVENTS", "EV_COMMIT", "EV_GRANT", "EV_GROUP_JOIN", "EV_RELEASE",

@@ -1,0 +1,217 @@
+"""Perf-gate + bench-JSON plumbing tests: the gate's pass/fail contract
+(wall thresholds, exact compile counts at equal scope, error/new-module
+handling), the ``run.py --only --json`` merge path, and the
+roofline-table filters."""
+import json
+
+import pytest
+
+from benchmarks import perf_gate, roofline_table
+from benchmarks.run import _parse_row, _top_fns, merge_only_doc
+
+
+def _mod(wall=100.0, compiles=3, quick=True, scope="suite", **extra):
+    d = {"wall_s": wall, "compiles": compiles, "quick": quick,
+         "scope": scope, "peak_rss_mb": 100.0, "rows": [], "sweeps": []}
+    d.update(extra)
+    return d
+
+
+def _doc(**mods):
+    return {"quick": True, "modules": mods,
+            "total_wall_s": sum(m.get("wall_s", 0.0) for m in mods.values())}
+
+
+# ---------------------------------------------------------------- gate ---
+
+def test_gate_passes_on_identical_docs():
+    doc = _doc(fig02=_mod(), fig15=_mod(wall=50.0))
+    ok, lines = perf_gate.compare(doc, doc)
+    assert ok and lines[-1] == "gate: PASS"
+
+
+def test_gate_fails_on_2x_wall_regression():
+    base = _doc(fig02=_mod(wall=100.0))
+    fresh = _doc(fig02=_mod(wall=200.0))
+    ok, lines = perf_gate.compare(base, fresh)
+    assert not ok
+    assert any(l.startswith("FAIL fig02: wall") for l in lines)
+
+
+def test_gate_wall_slack_absorbs_small_module_noise():
+    # 2x of a 3s module is within the 5s slack — tiny modules don't flap
+    base = _doc(kernels=_mod(wall=3.0))
+    fresh = _doc(kernels=_mod(wall=6.0))
+    ok, _ = perf_gate.compare(base, fresh)
+    assert ok
+
+
+def test_gate_speedup_never_fails_but_is_noted():
+    base = _doc(fig06=_mod(wall=200.0))
+    fresh = _doc(fig06=_mod(wall=20.0))
+    ok, lines = perf_gate.compare(base, fresh)
+    assert ok
+    assert any("re-baselining" in l for l in lines)
+
+
+def test_gate_compile_count_exact_at_equal_scope():
+    base = _doc(fig02=_mod(compiles=3))
+    fresh = _doc(fig02=_mod(compiles=4))
+    ok, lines = perf_gate.compare(base, fresh)
+    assert not ok
+    assert any("compiles 4 != baseline 3" in l for l in lines)
+    # scope mismatch: count difference is informational, not gating
+    fresh2 = _doc(fig02=_mod(compiles=4, scope="only:fig02"))
+    ok2, lines2 = perf_gate.compare(base, fresh2)
+    assert ok2
+    assert any("compile count not compared" in l for l in lines2)
+    # legacy baseline without scope marker: also not gated
+    legacy = _doc(fig02=_mod(compiles=3, scope=None))
+    ok3, _ = perf_gate.compare(legacy, fresh)
+    assert ok3
+
+
+def test_gate_fresh_error_fails():
+    base = _doc(fig02=_mod())
+    fresh = _doc(fig02=_mod(error="RuntimeError: boom"))
+    ok, lines = perf_gate.compare(base, fresh)
+    assert not ok
+    assert any("errored" in l for l in lines)
+
+
+def test_gate_baseline_error_skips_compare():
+    base = _doc(fig02=_mod(error="old failure"))
+    fresh = _doc(fig02=_mod(wall=500.0))
+    ok, lines = perf_gate.compare(base, fresh)
+    assert ok
+    assert any("baseline errored" in l for l in lines)
+
+
+def test_gate_new_and_missing_modules():
+    base = _doc(fig02=_mod(), fig06=_mod())
+    fresh = _doc(fig02=_mod(), profile=_mod())
+    ok, lines = perf_gate.compare(base, fresh)          # subset is fine
+    assert ok
+    assert any(l.startswith("note profile: new module") for l in lines)
+    assert any("not in fresh run" in l for l in lines)
+    # but an explicitly requested module must be present
+    ok2, lines2 = perf_gate.compare(base, fresh, modules=["fig06"])
+    assert not ok2
+    assert any("missing from fresh run" in l for l in lines2)
+
+
+def test_gate_modules_filter_limits_gating():
+    base = _doc(fig02=_mod(wall=100.0), fig06=_mod(wall=100.0))
+    fresh = _doc(fig02=_mod(wall=100.0), fig06=_mod(wall=900.0))
+    ok, _ = perf_gate.compare(base, fresh, modules=["fig02"])
+    assert ok                   # fig06's regression is out of scope
+    ok2, _ = perf_gate.compare(base, fresh, modules=["fig06"])
+    assert not ok2
+
+
+def test_gate_quick_full_mismatch_skips_wall():
+    base = _doc(fig02=_mod(wall=10.0, quick=True))
+    fresh = _doc(fig02=_mod(wall=900.0, quick=False))
+    ok, lines = perf_gate.compare(base, fresh)
+    assert ok
+    assert any("mode mismatch" in l for l in lines)
+
+
+def test_gate_cli_roundtrip(tmp_path):
+    base = _doc(fig02=_mod(wall=100.0))
+    fresh = _doc(fig02=_mod(wall=400.0))
+    bp, fp = tmp_path / "base.json", tmp_path / "fresh.json"
+    bp.write_text(json.dumps(base))
+    fp.write_text(json.dumps(fresh))
+    rep = tmp_path / "report.txt"
+    rc = perf_gate.main(["--baseline", str(bp), "--fresh", str(fp),
+                         "--report", str(rep)])
+    assert rc == 1
+    assert "gate: FAIL" in rep.read_text()
+    rc2 = perf_gate.main(["--baseline", str(bp), "--fresh", str(fp),
+                          "--wall-ratio", "10"])
+    assert rc2 == 0
+    assert perf_gate.main(["--baseline", str(tmp_path / "nope.json"),
+                           "--fresh", str(fp)]) == 2
+
+
+# --------------------------------------------------------------- merge ---
+
+def test_merge_refreshes_one_module_and_resums_wall(tmp_path):
+    base = _doc(fig02=_mod(wall=10.0), fig06=_mod(wall=20.0))
+    path = tmp_path / "BENCH_run.json"
+    path.write_text(json.dumps(base))
+    fresh = _doc(fig02=_mod(wall=30.0, compile_time_s=4.5,
+                            backend_compiles=7, hlo_kb=12.3,
+                            compiled_fns={"jit(_run_dyn)":
+                                          {"n": 1, "secs": 4.0}}))
+    out, note = merge_only_doc(fresh, str(path))
+    assert note is None
+    assert set(out["modules"]) == {"fig02", "fig06"}
+    assert out["total_wall_s"] == pytest.approx(50.0)
+    # the new telemetry fields ride through the merge untouched
+    m = out["modules"]["fig02"]
+    assert m["compile_time_s"] == 4.5
+    assert m["backend_compiles"] == 7
+    assert m["compiled_fns"]["jit(_run_dyn)"]["secs"] == 4.0
+    # and json-roundtrip cleanly
+    m2 = json.loads(json.dumps(out))["modules"]["fig02"]
+    assert m2["compiled_fns"]["jit(_run_dyn)"]["n"] == 1
+
+
+def test_merge_missing_baseline_writes_fresh(tmp_path):
+    fresh = _doc(fig02=_mod())
+    out, note = merge_only_doc(fresh, str(tmp_path / "absent.json"))
+    assert out is fresh and note is None
+
+
+@pytest.mark.parametrize("content", ["{not json", '{"modules": 17}',
+                                     '["a", "list"]'])
+def test_merge_corrupt_baseline_is_loud(tmp_path, content):
+    path = tmp_path / "corrupt.json"
+    path.write_text(content)
+    fresh = _doc(fig02=_mod())
+    out, note = merge_only_doc(fresh, str(path))
+    assert out is fresh
+    assert note is not None and note.startswith("merge_skipped=")
+
+
+def test_top_fns_bounded_and_ranked():
+    fns = {f"jit(f{i})": {"n": 1, "secs": float(i)} for i in range(10)}
+    top = _top_fns(fns, k=3)
+    assert list(top) == ["jit(f9)", "jit(f8)", "jit(f7)"]
+
+
+def test_parse_row_tolerates_non_numeric():
+    rec = _parse_row("roofline_engine_x,1.5,bottleneck=memory;ai=0.62")
+    assert rec["us_per_call"] == 1.5
+    assert rec["derived"]["bottleneck"] == "memory"
+    assert rec["derived"]["ai"] == 0.62
+
+
+# ------------------------------------------------------------- roofline ---
+
+def _artifact(path, mesh, error=None):
+    doc = {"arch": "v5e", "shape": "train", "mesh": mesh}
+    if error:
+        doc["error"] = error
+    else:
+        doc["roofline"] = {"bottleneck": "memory", "t_compute_s": 1e-3,
+                           "t_memory_s": 2e-3, "t_collective_s": 0.0,
+                           "useful_ratio": 0.5, "mfu_bound": 0.4}
+        doc["memory"] = {"argument_bytes": 1 << 30, "temp_bytes": 1 << 29}
+    path.write_text(json.dumps(doc))
+
+
+def test_roofline_mesh_filter_applies_to_error_rows(tmp_path):
+    _artifact(tmp_path / "a_ok.json", mesh="2x2")
+    _artifact(tmp_path / "b_err.json", mesh="2x2", error="OOM")
+    _artifact(tmp_path / "c_ok.json", mesh="4x4")
+    _artifact(tmp_path / "d_err.json", mesh="4x4", error="OOM")
+    allrows = roofline_table.rows(out_dir=str(tmp_path))
+    assert len(allrows) == 4
+    filtered = roofline_table.rows(mesh_filter="2x2",
+                                   out_dir=str(tmp_path))
+    assert len(filtered) == 2           # the 4x4 ERROR row is gone too
+    assert all(",2x2," in r for r in filtered)
+    assert sum("ERROR" in r for r in filtered) == 1

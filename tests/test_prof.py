@@ -1,0 +1,153 @@
+"""Step-profiler tests (DESIGN.md §12): every stage ablation is a
+bit-exact no-op under its designated no-op config, the profiler's
+fractions are a partition of the measured per-iteration cost, and the
+compile accounting (one executable per ablation; telemetry counters)
+holds."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.lock import (CostModel, EngineConfig, WorkloadSpec,
+                             protocol_params, split_config, init_state_dyn)
+from repro.core.lock import engine as E
+from repro.obs import compile_log
+from repro.obs.prof import (STAGE_NOOPS, profile_row, profile_step,
+                            rank_table)
+
+N_STEPS = 40
+
+
+def _cfg(proto, *, txn_len=4, write_ratio=1.0, kind="hotspot_update",
+         threads=8, rows=64):
+    wl = WorkloadSpec(kind=kind, txn_len=txn_len, n_rows=rows,
+                      write_ratio=write_ratio)
+    return EngineConfig(protocol=protocol_params(proto), costs=CostModel(),
+                        workload=wl, n_threads=threads, horizon=500_000)
+
+
+def _run_steps(stat, dp, ablate=frozenset()):
+    step = jax.jit(E._make_step(stat, dp, ablate=ablate))
+    st = init_state_dyn(stat, dp)
+    for _ in range(N_STEPS):
+        st = step(st)
+    return st
+
+
+def _leaf_diffs(a, b):
+    pa, _ = jax.tree_util.tree_flatten_with_path(a)
+    pb, _ = jax.tree_util.tree_flatten_with_path(b)
+    return [jax.tree_util.keystr(k)
+            for (k, x), (_, y) in zip(pa, pb) if not jnp.array_equal(x, y)]
+
+
+# (stage, config under which its ablation must be the identity)
+NOOP_CASES = [
+    ("dup_analysis", _cfg("mysql", txn_len=1)),
+    ("deadlock_walk", _cfg("brook2pl")),
+    ("ticket_grant", _cfg("mysql", kind="uniform", write_ratio=0.0)),
+    ("commit_cursor", _cfg("mysql", kind="uniform", write_ratio=0.0)),
+    ("group_hotspot", _cfg("mysql")),
+    ("group_hotspot", _cfg("brook2pl")),
+]
+
+
+@pytest.mark.parametrize("stage,cfg", NOOP_CASES,
+                         ids=[f"{s}-{c.protocol.name}-{c.workload.kind}"
+                              f"L{c.workload.txn_len}w{c.workload.write_ratio}"
+                              for s, c in NOOP_CASES])
+def test_ablation_bit_exact_under_noop_config(stage, cfg):
+    stat, dp = split_config(cfg)
+    full = _run_steps(stat, dp)
+    abl = _run_steps(stat, dp, ablate=frozenset({stage}))
+    assert _leaf_diffs(full, abl) == []
+
+
+def test_tick_charge_ablation_touches_only_tb():
+    # under ANY config: the breakdown accumulator is write-only state
+    cfg = _cfg("mysql")
+    stat, dp = split_config(cfg)
+    full = _run_steps(stat, dp)
+    abl = _run_steps(stat, dp, ablate=frozenset({"tick_charge"}))
+    diffs = _leaf_diffs(full, abl)
+    assert diffs == [".g.tb"]
+    # and something was actually charged — the ablation removed real work
+    assert int(full.g.tb.sum()) > 0
+    assert int(abl.g.tb.sum()) == 0
+
+
+def test_empty_ablation_is_production_step():
+    cfg = _cfg("group")
+    stat, dp = split_config(cfg)
+    full = _run_steps(stat, dp)
+    default = _run_steps(stat, dp, ablate=frozenset())
+    assert _leaf_diffs(full, default) == []
+
+
+def test_unknown_stage_rejected():
+    cfg = _cfg("mysql")
+    stat, dp = split_config(cfg)
+    with pytest.raises((AssertionError, ValueError)):
+        E._make_step(stat, dp, ablate=frozenset({"nonsense"}))
+    with pytest.raises(ValueError):
+        profile_step(cfg, stages=("nonsense",))
+
+
+def test_stage_noops_cover_prof_stages():
+    assert set(STAGE_NOOPS) == set(E.PROF_STAGES)
+    tested = {s for s, _ in NOOP_CASES} | {"tick_charge"}
+    assert tested == set(E.PROF_STAGES)
+
+
+def test_profile_step_partitions_cost():
+    # two-stage profile keeps the test at 3 executables
+    cfg = _cfg("mysql", threads=16)
+    prof = profile_step(cfg, n_iters=16, repeats=1,
+                        stages=("commit_cursor", "tick_charge"))
+    assert prof.compiles == 3
+    names = [s.stage for s in prof.stages]
+    assert names[-1] == "other"
+    assert set(names) == {"commit_cursor", "tick_charge", "other"}
+    assert abs(sum(s.fraction for s in prof.stages) - 1.0) < 1e-9
+    assert all(s.us_per_iter >= 0.0 for s in prof.stages)
+    assert prof.us_per_iter > 0.0
+    assert prof.dominant.stage != "other"
+    # report renderers accept the profile
+    assert "dominant:" in rank_table(prof)
+    row = profile_row("profile_test", prof)
+    assert row.startswith("profile_test,") and "dominant=" in row
+
+
+def test_compile_telemetry_counts_fresh_compiles():
+    t0 = compile_log.snapshot()
+
+    @jax.jit
+    def probe(x):
+        return jnp.cumsum(x * 3.0)
+
+    probe(jnp.arange(101.0)).block_until_ready()
+    d = compile_log.delta(t0)
+    assert d["backend_compiles"] >= 1
+    assert d["compile_time_s"] > 0.0
+    assert any("probe" in name for name in d["fns"])
+    # hlo size of an AOT executable is non-trivial
+    compiled = jax.jit(lambda x: x @ x).lower(jnp.ones((8, 8))).compile()
+    assert compile_log.hlo_module_bytes(compiled) > 100
+
+
+def test_strict_mode_names_unregistered_entry_points():
+    @jax.jit
+    def sneaky(x):
+        return x * 2 + 1
+
+    sneaky(jnp.arange(7)).block_until_ready()
+    mod = sneaky.__wrapped__.__module__
+    found = compile_log.unregistered_compiles(prefixes=(mod,))
+    assert any("sneaky" in name for name in found)
+    # registered entry points are never reported
+    compile_log.register(sneaky)
+    try:
+        assert not any("sneaky" in n
+                       for n in compile_log.unregistered_compiles(
+                           prefixes=(mod,)))
+    finally:
+        compile_log._EXTRA.remove(sneaky)
