@@ -1,0 +1,54 @@
+"""Analysis-subsystem benchmark module: lint + certifier wall cost.
+
+Registers as ``analysis`` in benchmarks/run.py. The rows put the
+correctness tooling itself on the perf trajectory: twice-lowering every
+entry point is pure tracing (no XLA compile), so a jump in ``lint_*``
+wall time means tracing got heavier — usually a new Python-level loop
+in an entry point — and a jump in ``certify_*`` means the trace volume
+per run grew. Derived columns carry the correctness telemetry
+(findings, certified counts) so a regression in *what* was proven is as
+loud as a slowdown.
+"""
+import time
+
+
+def _row(name, wall_s, calls, **derived):
+    us = (wall_s / max(calls, 1)) * 1e6
+    kv = ";".join(f"{k}={v}" for k, v in derived.items())
+    return f"{name},{us:.0f},{kv}"
+
+
+def run(quick=True):
+    from repro.analysis import cli as acli
+    from repro.analysis import jaxpr_lint
+
+    rows = []
+    eps = jaxpr_lint.default_entry_points()
+    if quick:
+        keep = ("engine._run_dyn", "serving._hist_add",
+                "kernels.segment_sums")
+        eps = [e for e in eps if e.name in keep]
+    t0 = time.time()
+    findings = []
+    for ep in eps:
+        findings.extend(jaxpr_lint.lint_entry(ep))
+    rows.append(_row("lint_entries", time.time() - t0, len(eps),
+                     entries=len(eps), findings=len(findings)))
+
+    t0 = time.time()
+    lf = jaxpr_lint.lint_entry(jaxpr_lint.leaky_entry_point())
+    caught = int(any(f.rule in ("value-leak", "static-leak") for f in lf))
+    rows.append(_row("lint_leak_demo", time.time() - t0, 1,
+                     caught=caught))
+
+    kinds = ("zipf",) if quick else acli.KINDS
+    seeds = (1,) if quick else acli.SEEDS
+    t0 = time.time()
+    certs = acli.run_certify_matrix(kinds=kinds, seeds=seeds,
+                                    verbose=False)
+    n_ok = sum(1 for _k, _s, c in certs if c.ok)
+    rows.append(_row("certify_matrix", time.time() - t0, len(certs),
+                     runs=len(certs), certified=n_ok,
+                     committed=sum(c.n_committed for _k, _s, c in certs),
+                     edges=sum(c.n_edges for _k, _s, c in certs)))
+    return rows

@@ -27,7 +27,12 @@ Re-baselining: when a slowdown is real and accepted (new feature, wider
 coverage), re-run ``python -m benchmarks.run --only MOD --json
 BENCH_run.json`` and commit the refreshed file — the PR diff then shows
 the regression as a reviewed number instead of a silent drift
-(DESIGN.md §12).
+(DESIGN.md §12). For *speedups* the gate now closes its own loop:
+``--update-baseline`` rewrites the baseline entries of exactly the
+modules the compare flagged with a speedup note, from the fresh doc —
+never touching regressed, errored, or mode-mismatched modules — so
+"consider re-baselining" becomes a reviewable file change instead of a
+note that rots in a CI log.
 
 Exit code 0 = gate passed; 1 = regression/failure; 2 = usage error.
 """
@@ -126,6 +131,41 @@ def compare(baseline: dict, fresh: dict, *, wall_ratio: float = WALL_RATIO,
     return ok, lines
 
 
+def speedup_modules(baseline: dict, fresh: dict, *,
+                    wall_ratio: float = WALL_RATIO,
+                    wall_slack_s: float = WALL_SLACK_S) -> list[str]:
+    """Module names ``compare`` flags with a speedup note: present in
+    both docs, neither errored, same quick/full mode, and fresh wall
+    under ``baseline / wall_ratio - wall_slack_s``."""
+    out = []
+    base_mods = baseline.get("modules", {})
+    for name, f in fresh.get("modules", {}).items():
+        b = base_mods.get(name)
+        if b is None or f.get("error") or b.get("error"):
+            continue
+        if b.get("quick") != f.get("quick"):
+            continue
+        if f.get("wall_s", 0.0) < \
+                b.get("wall_s", 0.0) / wall_ratio - wall_slack_s:
+            out.append(name)
+    return sorted(out)
+
+
+def update_baseline(baseline: dict, fresh: dict, names) -> dict:
+    """New baseline doc with ``names``' module entries replaced by the
+    fresh ones. ``total_wall_s`` is recomputed from the merged modules;
+    top-level flags stay the baseline's (the merged doc can mix modes —
+    per-module ``quick`` markers carry the truth, as in merge_only_doc)."""
+    out = dict(baseline)
+    out["modules"] = dict(baseline.get("modules", {}))
+    fresh_mods = fresh.get("modules", {})
+    for name in names:
+        out["modules"][name] = fresh_mods[name]
+    out["total_wall_s"] = sum(
+        m.get("wall_s", 0.0) for m in out["modules"].values())
+    return out
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--baseline", required=True,
@@ -141,6 +181,9 @@ def main(argv=None) -> int:
                     help="skip the exact compile-count check")
     ap.add_argument("--report", default=None,
                     help="also write the report to this path (CI artifact)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite speedup-flagged modules' baseline "
+                         "entries from the fresh doc (in place)")
     args = ap.parse_args(argv)
 
     try:
@@ -161,6 +204,19 @@ def main(argv=None) -> int:
     if args.report:
         with open(args.report, "w") as fp:
             fp.write(report + "\n")
+    if args.update_baseline:
+        names = speedup_modules(baseline, fresh,
+                                wall_ratio=args.wall_ratio,
+                                wall_slack_s=args.wall_slack)
+        if names:
+            doc = update_baseline(baseline, fresh, names)
+            with open(args.baseline, "w") as fp:
+                json.dump(doc, fp, indent=1)
+                fp.write("\n")
+            print(f"baseline updated for speedups: {', '.join(names)} "
+                  f"-> {args.baseline}")
+        else:
+            print("no speedup-flagged modules; baseline unchanged")
     return 0 if ok else 1
 
 

@@ -98,12 +98,12 @@ def main() -> None:
     args, _ = ap.parse_known_args()
     quick = not args.full
 
-    from . import (common, compaction_bench, fig02_motivation,
-                   fig06_ablation, fig07_mix, fig08_scalability, fig09_sync,
-                   fig10_abort_skew, fig12_tpcc, fig13_batch, fig14_recovery,
-                   fig15_adaptive, fig16_brook, fig17_serving,
-                   fig18_waitprofile, kernel_bench, profile_step,
-                   roofline_table)
+    from . import (analysis_gate, common, compaction_bench,
+                   fig02_motivation, fig06_ablation, fig07_mix,
+                   fig08_scalability, fig09_sync, fig10_abort_skew,
+                   fig12_tpcc, fig13_batch, fig14_recovery, fig15_adaptive,
+                   fig16_brook, fig17_serving, fig18_waitprofile,
+                   kernel_bench, profile_step, roofline_table)
     from repro.obs import compile_log
     compile_log.enable_telemetry()
     modules = {
@@ -116,7 +116,7 @@ def main() -> None:
         "fig18": fig18_waitprofile,
         "compaction": compaction_bench,
         "kernels": kernel_bench, "roofline": roofline_table,
-        "profile": profile_step,
+        "profile": profile_step, "analysis": analysis_gate,
     }
     if args.only:
         modules = {args.only: modules[args.only]}

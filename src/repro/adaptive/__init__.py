@@ -16,13 +16,15 @@ Quickstart::
         [GovernorCell("adaptive", QueueRulePolicy(), drift, n_threads=64)],
         horizon=240_000, n_segments=12)
 """
-from .governor import (PRESETS, DEFAULT_ARMS, preset_params, preset_family,
+from .governor import (GUARD_CAP, GUARD_FLOOR, PRESETS, DEFAULT_ARMS,
+                       guard_timeout, preset_params, preset_family,
                        switch_safe, SegmentRecord, Policy, FixedPolicy,
                        QueueRulePolicy, EpsilonGreedyPolicy)
 from .runner import GovernorCell, run_governed, preset_timeline
 
 __all__ = [
-    "PRESETS", "DEFAULT_ARMS", "preset_params", "preset_family",
+    "GUARD_CAP", "GUARD_FLOOR", "PRESETS", "DEFAULT_ARMS",
+    "guard_timeout", "preset_params", "preset_family",
     "switch_safe", "SegmentRecord", "Policy", "FixedPolicy",
     "QueueRulePolicy", "EpsilonGreedyPolicy",
     "GovernorCell", "run_governed", "preset_timeline",

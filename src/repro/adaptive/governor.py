@@ -66,15 +66,15 @@ PRESETS: dict[str, tuple[str, dict, str]] = {
     # `brook_hold` keeps ordered acquisition but holds to commit
     # (strict 2PL without deadlocks, for heavy injected-abort mixes
     # where early readers are wasted work).
-    # guard timeout: 10 ms — an order of magnitude above any legitimate
-    # chop-ordered wait at governed thread counts (T<=128: ~10k ticks of
-    # queued holders), so brook traffic never falsely times out, and
-    # comfortably below governed horizons (fig15: 180k+ ticks), so a
-    # cycle inherited in the EARLY part of a run resolves mid-run.
-    # (mysql's default 500k would outlive the whole horizon and never
-    # fire.) A switch-in later than horizon - 100k ticks can still ride
-    # its stall to the end — deriving the guard from horizon /
-    # n_segments is a ROADMAP follow-on.
+    # The guard timeout here is the context-free fallback (10 ms): an
+    # order of magnitude above any legitimate chop-ordered wait at
+    # governed thread counts (T<=128: ~10k ticks of queued holders), so
+    # brook traffic never falsely times out. Runners that know their
+    # segmentation pass horizon/n_segments to ``preset_params`` and get
+    # :func:`guard_timeout` instead — half a segment, clamped — so a
+    # cycle inherited at the LAST segment boundary still resolves before
+    # the horizon (the fixed 100k guard could outlive a late switch-in's
+    # remaining run; regression-tested in tests/test_adaptive.py).
     "brook2pl": ("brook2pl", {}, "brook"),
     "brook_hold": ("brook2pl", {"per_op_release": False}, "brook"),
     "brook_guard": ("brook2pl", {"wait_timeout": 100_000,
@@ -84,8 +84,39 @@ PRESETS: dict[str, tuple[str, dict, str]] = {
 DEFAULT_ARMS = ("o2", "group", "mysql")
 
 
-def preset_params(name: str) -> ProtocolParams:
+# guard-timeout derivation bounds (ticks). The floor keeps the guard an
+# order of magnitude above legitimate chop-ordered waits at governed
+# thread counts (no false timeouts on brook-generated traffic, asserted
+# in tests/test_adaptive.py); the cap keeps it at the old fixed value —
+# segmenting more coarsely than 200k-tick segments gains nothing because
+# inherited-cycle stalls longer than that were already resolvable.
+GUARD_FLOOR = 20_000
+GUARD_CAP = 100_000
+
+
+def guard_timeout(horizon: int, n_segments: int) -> int:
+    """Derived residual-resolver timeout: half a governed segment,
+    clamped to [GUARD_FLOOR, GUARD_CAP]. Half, so a cycle inherited at a
+    segment boundary — the only place switches happen — resolves with
+    segment time to spare even when the switch lands on the LAST
+    boundary."""
+    seg = int(horizon) // max(int(n_segments), 1)
+    return max(GUARD_FLOOR, min(GUARD_CAP, seg // 2))
+
+
+def preset_params(name: str, *, horizon: int | None = None,
+                  n_segments: int | None = None) -> ProtocolParams:
+    """Resolve a preset. When the caller supplies its segmentation
+    (``horizon`` + ``n_segments``), presets that re-arm the wait timeout
+    as their residual deadlock resolver (an explicit positive
+    ``wait_timeout`` override — brook_guard) get :func:`guard_timeout`
+    instead of the fixed fallback. Presets whose timeouts are protocol
+    semantics (mysql's 500k default, brook2pl's hard 0) are untouched."""
     proto, over, _ = PRESETS[name]
+    if (horizon is not None and n_segments is not None
+            and over.get("wait_timeout", 0) > 0):
+        g = guard_timeout(horizon, n_segments)
+        over = dict(over, wait_timeout=g, commit_wait_timeout=g)
     return protocol_params(proto, **over)
 
 

@@ -58,9 +58,12 @@ class GovernorCell:
 
 
 def _cell_config(cell: GovernorCell, preset: str, seg: int,
-                 horizon: int) -> EngineConfig:
+                 horizon: int, n_segments: int | None = None
+                 ) -> EngineConfig:
     return EngineConfig(
-        protocol=preset_params(preset), costs=cell.costs,
+        protocol=preset_params(preset, horizon=horizon,
+                               n_segments=n_segments),
+        costs=cell.costs,
         workload=cell.drift.spec(seg), n_threads=cell.n_threads,
         horizon=horizon, p_abort=cell.p_abort)
 
@@ -125,7 +128,7 @@ def run_governed(cells: Iterable[GovernorCell], *, horizon: int,
             p0 = c.policy.decide(0, [])
             preset0.append(p0)
             st, dp0 = _engine.split_config(
-                _cell_config(c, p0, 0, horizon),
+                _cell_config(c, p0, 0, horizon, n_segments),
                 pad_threads=pad_t, pad_len=pad_l)
             assert stat is None or st == stat
             stat = st
@@ -167,7 +170,7 @@ def run_governed(cells: Iterable[GovernorCell], *, horizon: int,
                         for c, h in zip(bcells, history)]
                        if k else preset0)
             dps = [_engine.split_config(
-                _cell_config(c, p, k, horizon),
+                _cell_config(c, p, k, horizon, n_segments),
                 pad_threads=pad_t, pad_len=pad_l)[1]
                 for c, p in zip(bcells, presets)]
             ranks = [np.asarray(dp.wl.acq_rank) for dp in dps]

@@ -1,0 +1,35 @@
+"""Correctness analysis subsystem (DESIGN.md §13).
+
+Two static/dynamic certifiers over the lock engine:
+
+* :mod:`.jaxpr_lint` — the trace-leak linter: lowers every registered
+  jitted entry point twice with value-only config variants and certifies
+  the jaxprs byte-identical (no knob constant-folded into the program),
+  plus rule walks over the jaxpr (no host callbacks / 64-bit values /
+  weak floats in the hot loop, scatter mode discipline, protocol-branch
+  count vs registry).
+* :mod:`.isolation` — the serializability certifier: consumes TraceBuf
+  event streams and proves each run's schedule conflict-serializable
+  under its protocol's discipline (txn-level ww acyclicity, or piece
+  level for chopped protocols), strict-2PL hold rules, Brook ascending
+  ranks, and dirty-read freedom under injected aborts.
+
+``python -m repro.analysis.cli`` runs both as a report; the CI
+analysis-gate job fails the build on any finding.
+"""
+from . import isolation, jaxpr_lint
+from .isolation import (Attempt, Certificate, Edge, attempts_from_events,
+                        certify, certify_run, dependency_graph, find_cycle,
+                        total_trace_wait_ticks, validate_events)
+from .jaxpr_lint import (EntryPoint, LintFinding, LintReport,
+                         PROTOCOL_COND_SITES, default_entry_points,
+                         leaky_entry_point, lint_entry, run_lint)
+
+__all__ = [
+    "isolation", "jaxpr_lint",
+    "Attempt", "Certificate", "Edge", "attempts_from_events", "certify",
+    "certify_run", "dependency_graph", "find_cycle",
+    "total_trace_wait_ticks", "validate_events",
+    "EntryPoint", "LintFinding", "LintReport", "PROTOCOL_COND_SITES",
+    "default_entry_points", "leaky_entry_point", "lint_entry", "run_lint",
+]

@@ -406,11 +406,21 @@ class StepEvents(NamedTuple):
 
     Mask timing: ``grant``/``group_join``/``timeout``/``victim`` describe
     transitions decided at the *start* of the interval (timestamp
-    ``t_pre``); ``release``/``commit``/``wait_enter`` fire at its end
-    (``t_post``). Rows: ``row_cur`` is the thread's current-op row for
-    start-of-interval events and ``release``; ``row_begin`` is the row of
-    the op begun this iteration (``wait_enter``); ``commit`` is a
-    thread-level event (row -1 in the trace).
+    ``t_pre``); ``release``/``commit``/``wait_enter``/``abort`` fire at
+    its end (``t_post``). Rows: ``row_cur`` is the thread's current-op
+    row for start-of-interval events and ``release``; ``row_begin`` is
+    the row of the op begun this iteration (``wait_enter``); ``commit``
+    and ``abort`` are thread-level events (row -1 in the trace).
+
+    ``abort`` fires when a rollback COMPLETES, whatever forced it —
+    timeout, deadlock victim, injected commit-point abort (``p_abort``),
+    cascade, or proactive rollback. ``timeout``/``victim`` only cover
+    the first two causes, so without this mask a trace consumer cannot
+    partition a thread's events into transaction attempts once aborts
+    are injected — the serializability certifier
+    (``repro.analysis.isolation``) needs the terminator itself. Its
+    timestamp is also the instant the reverts landed and the tickets
+    were released (step 6c runs in the same iteration).
     """
     t_pre: jnp.ndarray       # () tick at interval start
     t_post: jnp.ndarray      # () tick at interval end
@@ -423,6 +433,7 @@ class StepEvents(NamedTuple):
     release: jnp.ndarray     # (T,) bool brook per-op early release
     commit: jnp.ndarray      # (T,) bool txn committed
     wait_enter: jnp.ndarray  # (T,) bool took a ticket, entered WAIT
+    abort: jnp.ndarray       # (T,) bool rollback completed (any cause)
 
 
 def _make_step_events(stat: StaticShape, dp: DynParams, until=None,
@@ -982,7 +993,7 @@ def _make_step_events(stat: StaticShape, dp: DynParams, until=None,
             t_pre=s.g.now, t_post=g.now, row_cur=cur_key, row_begin=bkey,
             grant=grantable, group_join=is_member_grant, timeout=to_fire,
             victim=victim, release=rel_now, commit=c_done,
-            wait_enter=need_ticket)
+            wait_enter=need_ticket, abort=r_done)
         return SimState(th, rows, g), ev
 
     return step

@@ -22,6 +22,7 @@ from repro.configs import get_config
 from repro.models import lm_spec, init_params, prefill, decode_step
 from repro.models.transformer import lm_init_cache
 from repro.launch.mesh import make_host_mesh
+from repro.obs import compile_log as _compile_log
 
 
 @dataclasses.dataclass
@@ -50,6 +51,7 @@ class GroupServer:
         self._decode = jax.jit(
             lambda p, t, c, pos: decode_step(p, cfg, tokens=t, caches=c,
                                              pos=pos))
+        _compile_log.register(self._decode)
         self.steps_fired = 0
         self.members_served = 0
 

@@ -29,6 +29,7 @@ from repro.distributed import (param_shardings, batch_shardings,
                                StragglerDetector, HeartbeatMonitor)
 from repro.launch.mesh import make_host_mesh
 from repro.launch.steps import make_train_step
+from repro.obs import compile_log as _compile_log
 
 
 def train(arch: str, smoke: bool, steps: int, batch: int, seq: int,
@@ -41,8 +42,10 @@ def train(arch: str, smoke: bool, steps: int, batch: int, seq: int,
 
     with jax.set_mesh(mesh):
         p_shard = param_shardings(specs, mesh, "train")
-        params = jax.jit(lambda k: init_params(lm_spec(cfg), k),
-                         out_shardings=p_shard)(jax.random.PRNGKey(0))
+        init_fn = jax.jit(lambda k: init_params(lm_spec(cfg), k),
+                          out_shardings=p_shard)
+        _compile_log.register(init_fn)
+        params = init_fn(jax.random.PRNGKey(0))
         opt_state = adamw.init(params)
         dstate = init_state()
         dc = DataConfig(seed=0)
@@ -57,6 +60,7 @@ def train(arch: str, smoke: bool, steps: int, batch: int, seq: int,
 
         step_fn = jax.jit(make_train_step(cfg, opt_cfg, use_kernel),
                           donate_argnums=(0, 1))
+        _compile_log.register(step_fn)
         detector = StragglerDetector()
         heart = HeartbeatMonitor()
 

@@ -26,9 +26,10 @@ from .prof import (STAGE_NOOPS, StageCost, StepProfile, profile_row,
                    profile_step, rank_table)
 from .export import (breakdown_table, dump_chrome_trace, to_chrome_trace,
                      wait_profile)
-from .trace import (EVENTS, EV_COMMIT, EV_GRANT, EV_GROUP_JOIN, EV_RELEASE,
-                    EV_TIMEOUT, EV_VICTIM, EV_WAIT_ENTER, TraceBuf,
-                    events_host, make_trace, run_traced, simulate_traced)
+from .trace import (EVENTS, EV_ABORT, EV_COMMIT, EV_GRANT, EV_GROUP_JOIN,
+                    EV_RELEASE, EV_TIMEOUT, EV_VICTIM, EV_WAIT_ENTER,
+                    TraceBuf, events_host, make_trace, run_traced,
+                    simulate_traced)
 
 __all__ = [
     "breakdown", "compile_log", "export", "prof", "trace",
@@ -37,7 +38,8 @@ __all__ = [
     "profile_step", "rank_table",
     "breakdown_table", "dump_chrome_trace", "to_chrome_trace",
     "wait_profile",
-    "EVENTS", "EV_COMMIT", "EV_GRANT", "EV_GROUP_JOIN", "EV_RELEASE",
-    "EV_TIMEOUT", "EV_VICTIM", "EV_WAIT_ENTER", "TraceBuf", "events_host",
+    "EVENTS", "EV_ABORT", "EV_COMMIT", "EV_GRANT", "EV_GROUP_JOIN",
+    "EV_RELEASE", "EV_TIMEOUT", "EV_VICTIM", "EV_WAIT_ENTER",
+    "TraceBuf", "events_host",
     "make_trace", "run_traced", "simulate_traced",
 ]

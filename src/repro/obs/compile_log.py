@@ -21,11 +21,13 @@ Three layers, all opt-in and zero-cost when unused:
 
 Subsystems with their own jitted entry points register them here
 (idempotent); the core engine/aria/obs/kernels entry points are built
-in. Known blind spots (documented, not registered): ``launch/serve.py``
-jits per-instance (``self._decode``) and ``launch/train.py`` jits inside
-the launch function — neither is importable as a module-level handle,
-both are off the benchmark path, and strict mode will name them if they
-ever leak into one.
+in. Instance-level jits register at construction time rather than
+import time: ``launch/serve.py`` registers each ``GroupServer``'s
+``_decode`` in ``__init__`` and ``launch/train.py`` registers its init
+and train-step jits inside ``train()`` — so the accounting covers them
+exactly while they are live, and a process that never builds them pays
+nothing. The analysis linter (``repro.analysis.jaxpr_lint``) keeps its
+entry-point registry mirrored against ``_jitted()``.
 """
 from __future__ import annotations
 

@@ -18,9 +18,9 @@ import json
 
 from repro.core.lock.engine import TB_NAMES
 from .breakdown import fractions
-from .trace import (EVENTS, EV_GRANT, EV_WAIT_ENTER, EV_TIMEOUT, EV_VICTIM,
-                    EV_RELEASE, EV_GROUP_JOIN, EV_COMMIT, TraceBuf,
-                    events_host)
+from .trace import (EVENTS, EV_ABORT, EV_GRANT, EV_WAIT_ENTER, EV_TIMEOUT,
+                    EV_VICTIM, EV_RELEASE, EV_GROUP_JOIN, EV_COMMIT,
+                    TraceBuf, events_host)
 
 
 def _as_events(trace_or_events) -> dict:
@@ -76,7 +76,7 @@ def to_chrome_trace(trace_or_events, label: str = "lock-engine",
                      "end": EVENTS[e] if e is not None else "open"}})
     instants = {EV_COMMIT: "commit", EV_VICTIM: "deadlock_victim",
                 EV_TIMEOUT: "timeout", EV_RELEASE: "early_release",
-                EV_GROUP_JOIN: "group_join"}
+                EV_GROUP_JOIN: "group_join", EV_ABORT: "abort"}
     for i in range(ev["n"]):
         e = int(ev["ev"][i])
         if e not in instants:

@@ -40,11 +40,13 @@ from repro.core.lock.engine import (DynParams, EngineConfig, I32, INF, NOTK,
                                     StepEvents, split_config, init_state_dyn)
 from repro.core.lock.workload import WorkloadSpec
 
-# event ids — index into EVENTS; stable across PRs (traces are artifacts)
+# event ids — index into EVENTS; stable across PRs (traces are artifacts),
+# so new events only ever APPEND ("abort" = rollback completed, any cause —
+# the attempt terminator the isolation certifier partitions on)
 EVENTS = ("grant", "wait_enter", "timeout", "deadlock_victim",
-          "early_release", "group_join", "commit")
+          "early_release", "group_join", "commit", "abort")
 (EV_GRANT, EV_WAIT_ENTER, EV_TIMEOUT, EV_VICTIM, EV_RELEASE, EV_GROUP_JOIN,
- EV_COMMIT) = range(len(EVENTS))
+ EV_COMMIT, EV_ABORT) = range(len(EVENTS))
 
 
 class TraceBuf(NamedTuple):
@@ -90,6 +92,7 @@ def _record(tbuf: TraceBuf, se: StepEvents) -> TraceBuf:
         (se.group_join, se.t_pre, se.row_cur, EV_GROUP_JOIN),
         (se.release, se.t_post, se.row_cur, EV_RELEASE),
         (se.commit, se.t_post, no_row, EV_COMMIT),
+        (se.abort, se.t_post, no_row, EV_ABORT),
         (se.wait_enter, se.t_post, se.row_begin, EV_WAIT_ENTER),
     )
     m = jnp.concatenate([b[0] & tbuf.on for b in blocks])

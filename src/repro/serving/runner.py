@@ -195,11 +195,16 @@ def _seg_compiles() -> int:
             + _engine._run_seg_batch._cache_size())
 
 
-def _cell_config(cell: ServeCell, preset: str) -> EngineConfig:
+def _cell_config(cell: ServeCell, preset: str,
+                 seg_ticks: int | None = None) -> EngineConfig:
+    horizon = cell.schedule.horizon
+    n_segments = max(1, horizon // seg_ticks) if seg_ticks else None
     return EngineConfig(
-        protocol=preset_params(preset), costs=cell.costs,
+        protocol=preset_params(preset, horizon=horizon,
+                               n_segments=n_segments),
+        costs=cell.costs,
         workload=cell.workload, n_threads=cell.n_threads,
-        horizon=cell.schedule.horizon, p_abort=cell.p_abort)
+        horizon=horizon, p_abort=cell.p_abort)
 
 
 def _pctl(resp_us: list, q: float) -> float:
@@ -454,7 +459,7 @@ def serve(cells: Iterable[ServeCell], *, seg_ticks: int,
             prologue.append(ln.admit(0))
             ln.dispatch()
             ln.check_conservation("t=0")
-            st, dp0 = _engine.split_config(_cell_config(c, p),
+            st, dp0 = _engine.split_config(_cell_config(c, p, seg_ticks),
                                            pad_threads=pad_t,
                                            pad_len=pad_l)
             assert stat is None or st == stat
@@ -487,7 +492,7 @@ def serve(cells: Iterable[ServeCell], *, seg_ticks: int,
                         "unresolvably — use 'brook_guard' "
                         "(DESIGN.md §9.2)")
                 ln.all_ordered &= bool(preset_params(p).ordered_acquire)
-                dp = _engine.split_config(_cell_config(c, p),
+                dp = _engine.split_config(_cell_config(c, p, seg_ticks),
                                           pad_threads=pad_t,
                                           pad_len=pad_l)[1]
                 dps.append(dp._replace(txn_cap=ln.cap_vector(pad_t)))

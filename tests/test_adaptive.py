@@ -510,10 +510,62 @@ class TestBrookSwitchIn:
     def test_fixed_brook_guard_no_false_timeouts(self):
         """The guard timeout must never fire on brook-generated waits:
         a brook_guard run from segment 0 pays zero forced aborts (the
-        property the preset comment claims)."""
+        property the preset comment claims). At 240k/6 the derived
+        guard sits on GUARD_FLOOR — this is also the floor's no-false-
+        timeout certification."""
+        from repro.adaptive import GUARD_FLOOR, guard_timeout
+        assert guard_timeout(240_000, 6) == GUARD_FLOOR
         cell = GovernorCell("fx_guard", FixedPolicy("brook_guard"),
                             stationary(self.W, 6), 64)
         res = run_governed([cell], horizon=240_000, n_segments=6)
         assert res["fx_guard"].forced_aborts == 0
         assert res["fx_guard"].dd_ticks == 0
         assert res["fx_guard"].commits > 0
+
+    def test_guard_timeout_derivation(self):
+        """guard_timeout = half a segment clamped to [floor, cap]; the
+        derivation only rewrites presets that re-arm the timeout as a
+        resolver (brook_guard), never protocol-semantic timeouts."""
+        from repro.adaptive import (GUARD_CAP, GUARD_FLOOR, guard_timeout,
+                                    preset_params)
+        assert guard_timeout(480_000, 4) == 60_000
+        assert guard_timeout(240_000, 6) == GUARD_FLOOR      # clamp up
+        assert guard_timeout(2_000_000, 4) == GUARD_CAP      # clamp down
+        g = preset_params("brook_guard", horizon=480_000, n_segments=4)
+        assert g.wait_timeout == 60_000
+        assert g.commit_wait_timeout == 60_000
+        # context-free callers keep the fixed fallback
+        assert preset_params("brook_guard").wait_timeout == 100_000
+        # semantic timeouts untouched: mysql's default, brook2pl's 0
+        assert preset_params("mysql", horizon=480_000,
+                             n_segments=4).wait_timeout == \
+            preset_params("mysql").wait_timeout
+        assert preset_params("brook2pl", horizon=480_000,
+                             n_segments=4).wait_timeout == 0
+        # derived guard still counts as switch-safe (resolver present)
+        from repro.adaptive import switch_safe
+        assert switch_safe("brook_guard")
+
+    def test_brook_guard_last_boundary_switch_recovers(self):
+        """The ROADMAP case the fixed 100k guard could not serve: a
+        switch-in at the LAST segment boundary of a coarse-segment run.
+        Segments of 120k ticks derive a 60k guard — the inherited stall
+        times out with half the final segment left, so the tail segment
+        still commits. (The fixed guard would fire 100k in, leaving
+        only noise-level room before the horizon.)"""
+        from repro.adaptive import guard_timeout
+        n_seg, horizon = 4, 480_000
+        assert guard_timeout(horizon, n_seg) == 60_000
+
+        class _LastHop(Policy):
+            name = "lasthop"
+
+            def decide(self, k, history):
+                return "brook_guard" if k == n_seg - 1 else "mysql"
+
+        cell = GovernorCell("swt_late", _LastHop(),
+                            stationary(self.W, n_seg), 64)
+        res = run_governed([cell], horizon=horizon, n_segments=n_seg)
+        segs = res.segments["swt_late"]
+        assert segs[-1]["preset"] == "brook_guard"
+        assert segs[-1]["commits"] > 0, [s["commits"] for s in segs]

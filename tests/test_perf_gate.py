@@ -135,6 +135,78 @@ def test_gate_cli_roundtrip(tmp_path):
                            "--fresh", str(fp)]) == 2
 
 
+# ----------------------------------------------------- update-baseline ---
+
+def test_speedup_modules_selection_rules():
+    base = _doc(fast=_mod(wall=200.0),          # genuine speedup
+                slow=_mod(wall=100.0),          # regression
+                err=_mod(wall=200.0),           # fresh errored
+                olderr=_mod(wall=200.0, error="old"),   # baseline errored
+                mode=_mod(wall=200.0, quick=True),      # mode mismatch
+                tiny=_mod(wall=9.0))            # inside slack
+    fresh = _doc(fast=_mod(wall=20.0),
+                 slow=_mod(wall=300.0),
+                 err=_mod(wall=20.0, error="boom"),
+                 olderr=_mod(wall=20.0),
+                 mode=_mod(wall=20.0, quick=False),
+                 tiny=_mod(wall=1.0),
+                 brandnew=_mod(wall=1.0))       # no baseline entry
+    assert perf_gate.speedup_modules(base, fresh) == ["fast"]
+
+
+def test_speedup_modules_matches_compare_notes():
+    # the selection must agree with what compare() flags, or the update
+    # rewrites modules the report never mentioned
+    base = _doc(a=_mod(wall=200.0), b=_mod(wall=100.0))
+    fresh = _doc(a=_mod(wall=20.0), b=_mod(wall=99.0))
+    _, lines = perf_gate.compare(base, fresh)
+    noted = {l.split()[1].rstrip(":") for l in lines if "speedup" in l}
+    assert set(perf_gate.speedup_modules(base, fresh)) == noted == {"a"}
+
+
+def test_update_baseline_merges_and_resums_wall():
+    base = _doc(fast=_mod(wall=200.0, compiles=3),
+                keep=_mod(wall=50.0))
+    fresh = _doc(fast=_mod(wall=20.0, compiles=5, compile_time_s=1.5),
+                 keep=_mod(wall=49.0))
+    out = perf_gate.update_baseline(base, fresh, ["fast"])
+    assert out["modules"]["fast"]["wall_s"] == 20.0
+    assert out["modules"]["fast"]["compiles"] == 5
+    assert out["modules"]["fast"]["compile_time_s"] == 1.5
+    assert out["modules"]["keep"]["wall_s"] == 50.0      # untouched
+    assert out["total_wall_s"] == pytest.approx(70.0)
+    # input docs are not mutated
+    assert base["modules"]["fast"]["wall_s"] == 200.0
+
+
+def test_update_baseline_cli_rewrites_only_speedups(tmp_path):
+    base = _doc(fast=_mod(wall=200.0), slow=_mod(wall=10.0))
+    fresh = _doc(fast=_mod(wall=20.0), slow=_mod(wall=11.0))
+    bp, fp = tmp_path / "base.json", tmp_path / "fresh.json"
+    bp.write_text(json.dumps(base))
+    fp.write_text(json.dumps(fresh))
+    rc = perf_gate.main(["--baseline", str(bp), "--fresh", str(fp),
+                         "--update-baseline"])
+    assert rc == 0
+    doc = json.loads(bp.read_text())
+    assert doc["modules"]["fast"]["wall_s"] == 20.0      # rewritten
+    assert doc["modules"]["slow"]["wall_s"] == 10.0      # kept
+    assert doc["total_wall_s"] == pytest.approx(30.0)
+
+
+def test_update_baseline_cli_noop_without_speedups(tmp_path):
+    base = _doc(fig02=_mod(wall=100.0))
+    fresh = _doc(fig02=_mod(wall=95.0))
+    bp, fp = tmp_path / "base.json", tmp_path / "fresh.json"
+    bp.write_text(json.dumps(base))
+    fp.write_text(json.dumps(fresh))
+    before = bp.read_text()
+    rc = perf_gate.main(["--baseline", str(bp), "--fresh", str(fp),
+                         "--update-baseline"])
+    assert rc == 0
+    assert bp.read_text() == before          # byte-identical: no rewrite
+
+
 # --------------------------------------------------------------- merge ---
 
 def test_merge_refreshes_one_module_and_resums_wall(tmp_path):
