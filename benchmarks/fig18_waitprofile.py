@@ -10,8 +10,10 @@ the engine's on-device accumulator — no sampling, no host probes.
 
 A final traced row profiles mysql on a deadlock-prone zipf workload
 through the event buffer (``simulate_traced``): wait spans, victims,
-drop accounting — the same data ``examples/trace_quickstart.py`` exports
-to Perfetto.
+drop accounting, and the blame-matrix reduction of the same events
+(wait time paired with the holding transaction attempt, DESIGN.md §14)
+— the same data ``examples/trace_quickstart.py`` renders as a blame
+table and exports to Perfetto.
 """
 import time
 
@@ -19,9 +21,9 @@ import numpy as np
 
 from .common import emit
 from repro.core.lock import WorkloadSpec, simulate, extract
-from repro.obs import (check_conservation, fractions, simulate_traced,
-                       events_host, EV_WAIT_ENTER, EV_VICTIM, EV_GRANT,
-                       EV_TIMEOUT)
+from repro.obs import (blame_matrix, check_conservation, fractions,
+                       simulate_traced, events_host, EV_WAIT_ENTER,
+                       EV_VICTIM, EV_GRANT, EV_TIMEOUT)
 
 HOT = WorkloadSpec(kind="hotspot_update", txn_len=1, n_rows=512)
 ZIPF = WorkloadSpec(kind="zipf", txn_len=4, n_rows=2048, zipf_s=0.9)
@@ -64,6 +66,19 @@ def run(quick=True):
         f"grant={int(counts[EV_GRANT])};"
         f"timeout={int(counts[EV_TIMEOUT])};"
         f"deadlock_victim={int(counts[EV_VICTIM])}")
+
+    # (c) blame reduction of the same capture: how much of the queued
+    # time has a recorded holder, and how concentrated the blockers are
+    t0 = time.perf_counter()
+    b = blame_matrix(ev, end=int(s.g.now))
+    wall_us = (time.perf_counter() - t0) * 1e6
+    top = b.top_blockers(1)
+    rows.append(
+        f"fig18_blame_mysql,{wall_us:.1f},"
+        f"spans={b.n_spans};queued_ticks={b.total_wait};"
+        f"blocked_rows={len(b.per_record)};"
+        f"blockers={len(b.per_txn)};"
+        f"top_blocker_ticks={top[0][1] if top else 0}")
     return emit(rows)
 
 

@@ -103,7 +103,8 @@ def main() -> None:
                    fig08_scalability, fig09_sync, fig10_abort_skew,
                    fig12_tpcc, fig13_batch, fig14_recovery, fig15_adaptive,
                    fig16_brook, fig17_serving, fig18_waitprofile,
-                   kernel_bench, profile_step, roofline_table)
+                   fig19_hotspot, kernel_bench, profile_step,
+                   roofline_table)
     from repro.obs import compile_log
     compile_log.enable_telemetry()
     modules = {
@@ -113,7 +114,7 @@ def main() -> None:
         "fig12": fig12_tpcc, "fig13": fig13_batch,
         "fig14": fig14_recovery, "fig15": fig15_adaptive,
         "fig16": fig16_brook, "fig17": fig17_serving,
-        "fig18": fig18_waitprofile,
+        "fig18": fig18_waitprofile, "fig19": fig19_hotspot,
         "compaction": compaction_bench,
         "kernels": kernel_bench, "roofline": roofline_table,
         "profile": profile_step, "analysis": analysis_gate,

@@ -23,6 +23,10 @@ What this demonstrates (DESIGN.md §11):
 4. Overflow semantics — a deliberately tiny capacity: the buffer keeps
    its earliest events intact and counts the rest in ``dropped`` (the
    profile then says it is a lower bound) instead of wrapping.
+5. Blame (DESIGN.md §14) — the same event stream pairs each wait span
+   with the transaction attempt *holding* the row, yielding a blame
+   table (who caused the queueing on each hot record) and the longest
+   blocking chain; the export grows per-row queue-depth counter lanes.
 """
 import json
 import os
@@ -32,9 +36,9 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import numpy as np
 
 from repro.core.lock import WorkloadSpec, simulate, extract
-from repro.obs import (EV_VICTIM, check_conservation, dump_chrome_trace,
-                       events_host, make_trace, simulate_traced,
-                       wait_profile)
+from repro.obs import (EV_VICTIM, blame_table, check_conservation,
+                       critical_path, dump_chrome_trace, events_host,
+                       make_trace, simulate_traced, wait_profile)
 
 # zipf with multi-op transactions: lock-order cycles actually form, so
 # mysql's detection walk has victims to kill (hotspot_update txn_len=1
@@ -66,8 +70,10 @@ def main(out_path="trace_quickstart.json"):
           f"{n_victims} deadlock victims, {r.commits} commits")
     assert n_victims >= 1, "expected deadlock victims under mysql/zipf"
 
-    # 3. export for Perfetto and sanity-check the JSON round-trips
-    dump_chrome_trace(out_path, ev, label="mysql zipf quickstart")
+    # 3. export for Perfetto (with top-4 hotspot queue-depth counter
+    # lanes) and sanity-check the JSON round-trips
+    dump_chrome_trace(out_path, ev, label="mysql zipf quickstart",
+                      hotspot_lanes=4)
     with open(out_path) as f:
         doc = json.load(f)
     assert doc["traceEvents"], "empty trace"
@@ -77,6 +83,17 @@ def main(out_path="trace_quickstart.json"):
           "open it at https://ui.perfetto.dev")
 
     print("\n" + wait_profile(ev, top_k=8))
+
+    # 3b. blame: pair every wait span with the holding transaction
+    # attempt — who to kill, not just where it hurts — plus the longest
+    # blocking chain threading through the capture
+    end = int(s.g.now)
+    print("\n" + blame_table(ev, top_k=8, end=end))
+    path = critical_path(ev, end=end)
+    if path:
+        hops = " -> ".join(f"t{h['tid']}@r{h['row']}" for h in path[:6])
+        print(f"critical path: {len(path)} hops, "
+              f"{sum(h['dur'] for h in path)} blocked ticks: {hops}")
 
     # 4. overflow: a 64-event buffer on the same run keeps its first 64
     # events bit-identical to the big capture and counts the rest

@@ -179,6 +179,11 @@ class SegmentRecord:
             "breakdown": dict(m.breakdown),
             "wait_hist": list(self.wait_hist),
             "occ_hist": list(self.occ_hist),
+            # v4 addition: per-window top-K contended records from the
+            # contention accumulator delta (empty when EngineConfig.attrib
+            # is off); wait_ticks summed over ALL rows equals
+            # breakdown["lock_wait"] exactly (conservation, DESIGN.md §14)
+            "hotspots": [dict(h) for h in getattr(m, "hotspots", [])],
         }
 
 

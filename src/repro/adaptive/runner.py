@@ -52,6 +52,7 @@ class GovernorCell:
     n_threads: int
     costs: CostModel = CostModel()
     p_abort: float = 0.0
+    attrib: bool = False            # per-record contention accumulator
 
     def label(self) -> str:
         return self.policy.name
@@ -65,7 +66,7 @@ def _cell_config(cell: GovernorCell, preset: str, seg: int,
                                n_segments=n_segments),
         costs=cell.costs,
         workload=cell.drift.spec(seg), n_threads=cell.n_threads,
-        horizon=horizon, p_abort=cell.p_abort)
+        horizon=horizon, p_abort=cell.p_abort, attrib=cell.attrib)
 
 
 def _seg_compiles() -> int:

@@ -70,9 +70,11 @@ from repro.core.lock.workload import WorkloadSpec
 from repro.obs import trace as obs_trace
 
 # ---------------------------------------------------------------------------
-# protocol-branch registry: every lax.cond in the engine step that is gated
-# by a ProtocolParams flag. The PROTOCOLS table in costs.py is the source
-# of truth for which flags exist; these are the ones that gate a cond.
+# cond-site registry: every lax.cond in the engine step, gated by a
+# ProtocolParams flag (the PROTOCOLS table in costs.py is the source of
+# truth for which flags exist) or a run knob (``contention_attrib`` is
+# gated by ``EngineConfig.attrib`` / ``DynParams.attrib``, the per-record
+# contention accumulator — DESIGN.md §14).
 # ---------------------------------------------------------------------------
 
 PROTOCOL_COND_SITES = {
@@ -80,6 +82,7 @@ PROTOCOL_COND_SITES = {
     "group_lock": "group_lock",
     "group_commit": "group_commit",
     "hotspot_detect": "hot_queue",
+    "contention_attrib": "attrib",
 }
 
 _FORBIDDEN_IN_WHILE = ("pure_callback", "io_callback", "debug_callback",
@@ -159,7 +162,7 @@ def _engine_cfg(i: int) -> EngineConfig:
         protocol=proto, costs=costs, workload=_workload(i),
         n_threads=_SHAPE["n_threads"], horizon=10_000 + i,
         p_abort=0.02 * (i + 1), drain=b, max_iters=900_000 + i,
-        seed=5 + i)
+        seed=5 + i, attrib=not b)
 
 
 def _split(i: int):

@@ -31,6 +31,22 @@ def detect_hot(ids: jnp.ndarray, num_keys: int,
     return batch_counts(ids, num_keys) > threshold
 
 
+def detect_hot_queue(queue_depth: jnp.ndarray,
+                     threshold: int = DEFAULT_THRESHOLD) -> jnp.ndarray:
+    """One-shot hotspot mask from OBSERVED per-lock queue depths.
+
+    The same ``> threshold`` promote rule the lock engine applies to its
+    derived wait-queue length every iteration (``engine._hotspot_on``),
+    applied to a measured depth vector — e.g. the ``CA_QMAX`` lane of the
+    engine's per-record contention accumulator (``Globals.ca``), which
+    records each row's peak observed queue depth. This is what unifies
+    the batch-side detector with the engine's: both are thresholdings of
+    a queue-depth observable, differing only in where the observable
+    comes from.
+    """
+    return jnp.asarray(queue_depth) > threshold
+
+
 class HotspotState(NamedTuple):
     """EMA of per-key contention, carried across steps."""
     ema: jnp.ndarray          # (num_keys,) f32
@@ -46,12 +62,19 @@ def init_hotspot(num_keys: int) -> HotspotState:
     )
 
 
-def update_hotspot(state: HotspotState, ids: jnp.ndarray,
-                   threshold: int = DEFAULT_THRESHOLD,
-                   decay: float = 0.9,
-                   demote_below: float = 1.0) -> HotspotState:
-    """Advance the detector one step (promotion + sweeper demotion)."""
-    counts = batch_counts(ids, state.ema.shape[0]).astype(jnp.float32)
+def update_hotspot_queue(state: HotspotState, queue_depth: jnp.ndarray,
+                         threshold: int = DEFAULT_THRESHOLD,
+                         decay: float = 0.9,
+                         demote_below: float = 1.0) -> HotspotState:
+    """Advance the detector one step on an observed queue-depth vector.
+
+    Promote when the observed depth crosses ``threshold`` (the paper's
+    queue-length-32 rule); demote when the depth EMA drains below
+    ``demote_below`` (the background sweeper). This is the shared core:
+    :func:`update_hotspot` feeds it batch update counts, the engine
+    telemetry path feeds it per-segment observed depths.
+    """
+    counts = jnp.asarray(queue_depth).astype(jnp.float32)
     ema = decay * state.ema + (1.0 - decay) * counts
     promote = counts > threshold
     demote = state.hot & (ema < demote_below)
@@ -60,3 +83,13 @@ def update_hotspot(state: HotspotState, ids: jnp.ndarray,
         hot=(state.hot | promote) & ~demote,
         step=state.step + 1,
     )
+
+
+def update_hotspot(state: HotspotState, ids: jnp.ndarray,
+                   threshold: int = DEFAULT_THRESHOLD,
+                   decay: float = 0.9,
+                   demote_below: float = 1.0) -> HotspotState:
+    """Advance the detector one step (promotion + sweeper demotion)."""
+    return update_hotspot_queue(
+        state, batch_counts(ids, state.ema.shape[0]),
+        threshold=threshold, decay=decay, demote_below=demote_below)

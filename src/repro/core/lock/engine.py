@@ -106,6 +106,21 @@ _TB_PHASE_BIN = np.array(
 # bucket b>=1 = count in [2**(b-1), 2**b). 12 buckets cover queues of 2k+.
 N_QHIST = 12
 
+# --- per-record contention attribution (obs layer, DESIGN.md §14) --------
+# ``Globals.ca`` is an (N_CA, R) i32 accumulator scattered per ROW at the
+# tick-charge site, the per-record twin of the per-phase TickBreakdown.
+# CA_WAIT charges dt at the thread's current-op row under exactly the
+# TB_LOCKWAIT mask, so ``ca[CA_WAIT].sum() == tb[:, TB_LOCKWAIT].sum()``
+# (cold+hot) is a hard conservation invariant, asserted per run and per
+# governed segment. Gated by the traced ``DynParams.attrib`` flag: the
+# accumulator is write-only, so attribution-off runs are bit-exact with
+# the pre-accumulator engine in every other leaf, with zero extra
+# compiles. i32 like tb: exact mod 2^32.
+N_CA = 6
+CA_WAIT, CA_GRANTS, CA_TIMEOUTS, CA_VICTIMS, CA_QSUM, CA_QMAX = range(N_CA)
+CA_NAMES = ("wait_ticks", "grants", "timeouts", "victims",
+            "queue_sum", "queue_max")
+
 # --- stage ablation (profiler seam, DESIGN.md §12) -----------------------
 # ``_make_step_events(..., ablate={stage})`` replaces one named stage's
 # compute with a shape-correct stand-in so XLA dead-code-eliminates the
@@ -137,6 +152,7 @@ class EngineConfig:
     drain: bool = False               # run until all threads quiesce
     max_iters: int = 1_500_000
     seed: int = 0
+    attrib: bool = False              # per-record contention accumulator
 
 
 class StaticShape(NamedTuple):
@@ -196,6 +212,11 @@ class DynParams(NamedTuple):
     # revives HALTed slots between segments, which turns thread slots
     # into an open-system worker pool.
     txn_cap: jnp.ndarray
+    # Per-record contention attribution on/off (Globals.ca). Traced like
+    # every other knob — flipping it reuses the compiled program; the
+    # accumulator is write-only so the off branch leaves every other
+    # state leaf bit-exact.
+    attrib: jnp.ndarray
     # --- workload ---
     wl: DynWorkload
 
@@ -232,6 +253,7 @@ def split_config(cfg: EngineConfig, pad_threads: int | None = None,
         drain=b(cfg.drain), max_iters=i32(cfg.max_iters),
         n_active=i32(cfg.n_threads),
         txn_cap=jnp.full((T,), INF, I32),
+        attrib=b(cfg.attrib),
         wl=dyn_workload(w),
     )
     return stat, dp
@@ -287,6 +309,7 @@ class Globals(NamedTuple):
     dd_ticks: jnp.ndarray       # deadlock-detection ticks paid on grants
     iters: jnp.ndarray
     tb: jnp.ndarray             # (len(TB_BRANCHES), N_TB) i32 TickBreakdown
+    ca: jnp.ndarray             # (N_CA, R) i32 per-record contention
 
 
 class SimState(NamedTuple):
@@ -770,6 +793,32 @@ def _make_step_events(stat: StaticShape, dp: DynParams, until=None,
                 tbf = tbf.at[branch * N_TB + TB_DETECT].add(ddpay)
                 g = g._replace(tb=tbf.reshape(g.tb.shape))
 
+                # per-record contention attribution (DESIGN.md §14): the
+                # masks this iteration already computed, scattered per
+                # ROW instead of per phase bin. CA_WAIT uses exactly the
+                # mask/time that charges TB_LOCKWAIT (phase still WAIT at
+                # stage 5 pays dt at its current-op row), making
+                # ca[CA_WAIT].sum() == tb[:, TB_LOCKWAIT].sum() exact.
+                # Nothing downstream reads ca, so the off branch leaves
+                # every other leaf bit-exact; lax.cond skips the
+                # scatters at runtime for attrib-off single-config runs
+                # (select under vmap).
+                def _ca_on(ca):
+                    ca = ca.at[CA_WAIT, cur_key].add(
+                        jnp.where(th.phase == WAIT, dt, 0), mode="drop")
+                    ca = ca.at[CA_GRANTS, cur_key].add(
+                        jnp.where(grantable, 1, 0), mode="drop")
+                    ca = ca.at[CA_TIMEOUTS, cur_key].add(
+                        jnp.where(to_fire & in_wait, 1, 0), mode="drop")
+                    ca = ca.at[CA_VICTIMS, cur_key].add(
+                        jnp.where(victim, 1, 0), mode="drop")
+                    ca = ca.at[CA_QSUM].add(d.n_wait * dt)
+                    ca = ca.at[CA_QMAX].max(d.n_wait)
+                    return ca
+
+                g = g._replace(ca=lax.cond(dp.attrib, _ca_on,
+                                           lambda ca: ca, g.ca))
+
         done = paying & (work <= 0)
 
         # ------------------------------------------------ 6. completions
@@ -1068,6 +1117,7 @@ def init_state_dyn(stat: StaticShape, dp: DynParams) -> SimState:
         dd_ticks=jnp.asarray(0, I32),
         iters=jnp.asarray(0, I32),
         tb=jnp.zeros((len(TB_BRANCHES), N_TB), I32),
+        ca=jnp.zeros((N_CA, R), I32),
     )
     return SimState(th, rows, g)
 
@@ -1256,7 +1306,7 @@ def run_sim(cfg: EngineConfig) -> SimState:
 def simulate(protocol: str, workload: WorkloadSpec, n_threads: int,
              costs: CostModel | None = None, horizon: int = 2_000_000,
              p_abort: float = 0.0, drain: bool = False, seed: int = 0,
-             **proto_over) -> SimState:
+             attrib: bool = False, **proto_over) -> SimState:
     """Convenience entry point: run one protocol over one workload."""
     cfg = EngineConfig(
         protocol=protocol_params(protocol, **proto_over),
@@ -1267,5 +1317,6 @@ def simulate(protocol: str, workload: WorkloadSpec, n_threads: int,
         p_abort=p_abort,
         drain=drain,
         seed=seed,
+        attrib=attrib,
     )
     return run_sim(cfg)

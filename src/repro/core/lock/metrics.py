@@ -17,7 +17,8 @@ import dataclasses
 
 import numpy as np
 
-from .engine import SimState, N_HIST, HIST_BASE, TB_NAMES
+from .engine import (SimState, N_HIST, HIST_BASE, TB_NAMES, CA_NAMES,
+                     CA_WAIT, CA_GRANTS)
 
 TICKS_PER_SEC = 10_000_000  # 1 tick = 0.1us
 
@@ -49,6 +50,13 @@ class SimResult:
     # Defaulted empty so pre-PR7 Globals snapshots (no tb leaf) extract.
     breakdown: dict = dataclasses.field(default_factory=dict)
     breakdown_hot: dict = dataclasses.field(default_factory=dict)
+    # Per-record contention summary (obs layer, DESIGN.md §14): top-K rows
+    # of ``Globals.ca`` by wait ticks, as {"row": r, "wait_ticks": ...,
+    # "grants": ..., "timeouts": ..., "victims": ..., "queue_sum": ...,
+    # "queue_max": ...} dicts. Empty when attribution is off (the
+    # accumulator is all-zero) or on pre-PR10 Globals snapshots (no ca
+    # leaf), so old stores keep extracting.
+    hotspots: list = dataclasses.field(default_factory=list)
 
     def row(self) -> str:
         return (f"{self.protocol},{self.n_threads},{self.tps:.0f},"
@@ -68,6 +76,22 @@ def _pct_from_hist(hist: np.ndarray, q: float) -> float:
     # bucket b holds latencies in [base^b - 1, base^(b+1) - 1) ticks
     ticks = HIST_BASE ** (b + 0.5)
     return ticks / 10.0  # -> us
+
+
+def hotspot_rows(ca, top_k: int = 8) -> list[dict]:
+    """Top-``top_k`` contended records from a ``Globals.ca`` accumulator
+    (or a :func:`delta_globals` window of one), ranked by wait ticks with
+    grant count as the tiebreak. Rows with no recorded activity are
+    dropped, so attribution-off runs summarize to ``[]``."""
+    ca = np.asarray(ca)
+    active = ca.any(axis=0)
+    if not active.any():
+        return []
+    rank = np.lexsort((-ca[CA_GRANTS], -ca[CA_WAIT]))[:top_k]
+    return [
+        {"row": int(r), **{k: int(ca[i, r]) for i, k in enumerate(CA_NAMES)}}
+        for r in rank if active[r]
+    ]
 
 
 def extract(protocol: str, n_threads: int, s: SimState) -> SimResult:
@@ -110,6 +134,8 @@ def extract_globals(protocol: str, n_threads: int, g) -> SimResult:
         dd_ticks=int(getattr(g, "dd_ticks", 0)),
         breakdown=breakdown,
         breakdown_hot=breakdown_hot,
+        hotspots=(hotspot_rows(ca) if (ca := getattr(g, "ca", None))
+                  is not None else []),
     )
 
 
@@ -120,7 +146,11 @@ def delta_globals(g0, g1):
     segment's contribution is ``g1 - g0`` fieldwise; ``now`` becomes the
     window length, which makes the result directly consumable by
     :func:`extract_globals` (tps/cpu_util divide by the window). Works on
-    device arrays and on host (numpy) snapshots alike.
+    device arrays and on host (numpy) snapshots alike. One caveat: the
+    ``ca[CA_QMAX]`` lane of the contention accumulator is a running max,
+    not a counter — its delta is the window's *peak increase* (0 unless
+    the row set a new all-run queue-depth record inside the window), not
+    the window max; every other ca lane differences exactly.
     """
     return type(g1)(*(b - a for a, b in zip(g0, g1)))
 

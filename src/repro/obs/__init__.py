@@ -18,26 +18,41 @@ telemetry benchmarks use to put recompile regressions on the perf
 trajectory; :mod:`.prof` is the stage-ablation step profiler
 (DESIGN.md §12) that attributes per-iteration wall cost to engine
 stages.
+
+**Hotspot attribution** (DESIGN.md §14): :mod:`.hotspot` ranks the
+engine's per-record contention accumulator (``Globals.ca``, gated by
+``EngineConfig.attrib``) into wait-share/Gini/threshold-rule reports and
+asserts its conservation against the TickBreakdown; :mod:`.blame` pairs
+TraceBuf wait spans with the holding transaction attempts into a blame
+matrix, per-record blame table, and the longest blocking chain.
 """
-from . import breakdown, compile_log, export, prof, trace
+from . import blame, breakdown, compile_log, export, hotspot, prof, trace
 from .breakdown import (breakdown_row, check_conservation, fractions,
                         tick_sum)
 from .prof import (STAGE_NOOPS, StageCost, StepProfile, profile_row,
                    profile_step, rank_table)
 from .export import (breakdown_table, dump_chrome_trace, to_chrome_trace,
                      wait_profile)
+from .blame import (BlameResult, blame_matrix, blame_table, critical_path)
+from .hotspot import (check_ca_conservation, gini, hotspot_lane_events,
+                      hotspot_report, hotspot_summary, top_share,
+                      wait_share)
 from .trace import (EVENTS, EV_ABORT, EV_COMMIT, EV_GRANT, EV_GROUP_JOIN,
                     EV_RELEASE, EV_TIMEOUT, EV_VICTIM, EV_WAIT_ENTER,
                     TraceBuf, events_host, make_trace, run_traced,
                     simulate_traced)
 
 __all__ = [
-    "breakdown", "compile_log", "export", "prof", "trace",
+    "blame", "breakdown", "compile_log", "export", "hotspot", "prof",
+    "trace",
     "breakdown_row", "check_conservation", "fractions", "tick_sum",
     "STAGE_NOOPS", "StageCost", "StepProfile", "profile_row",
     "profile_step", "rank_table",
     "breakdown_table", "dump_chrome_trace", "to_chrome_trace",
     "wait_profile",
+    "BlameResult", "blame_matrix", "blame_table", "critical_path",
+    "check_ca_conservation", "gini", "hotspot_lane_events",
+    "hotspot_report", "hotspot_summary", "top_share", "wait_share",
     "EVENTS", "EV_ABORT", "EV_COMMIT", "EV_GRANT", "EV_GROUP_JOIN",
     "EV_RELEASE", "EV_TIMEOUT", "EV_VICTIM", "EV_WAIT_ENTER",
     "TraceBuf", "events_host",

@@ -57,9 +57,14 @@ def _wait_spans(ev: dict, end: int | None = None):
 
 
 def to_chrome_trace(trace_or_events, label: str = "lock-engine",
-                    end: int | None = None) -> dict:
+                    end: int | None = None,
+                    hotspot_lanes: int = 0) -> dict:
     """Chrome trace-event JSON document (dict; json.dump it yourself or
     use :func:`dump_chrome_trace`). Valid for Perfetto / chrome://tracing.
+
+    ``hotspot_lanes`` > 0 adds one counter track ("ph":"C", pid 1) per
+    hottest row showing its wait-queue depth over time — the per-record
+    contention picture beside the per-thread spans (DESIGN.md §14).
     """
     ev = _as_events(trace_or_events)
     us = lambda ticks: ticks / 10.0
@@ -87,6 +92,9 @@ def to_chrome_trace(trace_or_events, label: str = "lock-engine",
         if int(ev["row"][i]) >= 0:
             rec["args"] = {"row": int(ev["row"][i])}
         out.append(rec)
+    if hotspot_lanes > 0:
+        from .hotspot import hotspot_lane_events
+        out.extend(hotspot_lane_events(ev, top_k=hotspot_lanes, end=end))
     return {
         "traceEvents": out,
         "displayTimeUnit": "ms",

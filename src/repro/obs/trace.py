@@ -152,13 +152,14 @@ def simulate_traced(protocol: str, workload: WorkloadSpec, n_threads: int,
                     horizon: int = 2_000_000, p_abort: float = 0.0,
                     drain: bool = False, seed: int = 0, cap: int = 4096,
                     alloc: int | None = None, trace_on: bool = True,
+                    attrib: bool = False,
                     **proto_over) -> tuple[SimState, TraceBuf]:
     """Traced twin of :func:`repro.core.lock.simulate`."""
     cfg = EngineConfig(
         protocol=protocol_params(protocol, **proto_over),
         costs=costs or CostModel(), workload=workload,
         n_threads=n_threads, horizon=horizon, p_abort=p_abort,
-        drain=drain, seed=seed)
+        drain=drain, seed=seed, attrib=attrib)
     stat, dp = split_config(cfg)
     tb0 = make_trace(cap, alloc=alloc, on=trace_on)
     s, tb, _ = run_traced(stat, dp, init_state_dyn(stat, dp), tb0)

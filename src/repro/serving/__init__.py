@@ -12,6 +12,7 @@ from .runner import (ServeCell, ServeResults, ServingRecord, ServingResult,
 from .analytic import (erlang_c, mmc_wait_ticks, pool_capacity_tps,
                        predicted_response_ticks, predicted_util,
                        service_ticks, write_fraction)
+from .metrics import MetricFamily, ServingMetrics, render_families
 
 __all__ = [
     "ArrivalSchedule", "poisson", "bursty", "flash_crowd", "uniform",
@@ -20,4 +21,5 @@ __all__ = [
     "erlang_c", "mmc_wait_ticks", "pool_capacity_tps",
     "predicted_response_ticks", "predicted_util", "service_ticks",
     "write_fraction",
+    "MetricFamily", "ServingMetrics", "render_families",
 ]

@@ -88,6 +88,7 @@ class ServeCell:
     admission: str = "reject"       # reject newcomer | shed oldest | wait
     max_outstanding: int = 2        # dispatched-but-unfinished cap per slot
     sla_us: float = 0.0             # response-time SLA (0: no SLA account)
+    attrib: bool = False            # per-record contention accumulator
 
     def __post_init__(self):
         assert self.preset in PRESETS, self.preset
@@ -136,6 +137,9 @@ class ServingRecord:
             # v3 addition: per-window TickBreakdown (ticks per bin,
             # branches summed; conserves to pad_T * (t1 - t0))
             "breakdown": dict(m.breakdown),
+            # v4 addition: per-window top-K contended records (empty when
+            # ServeCell.attrib is off) — see adaptive.SegmentRecord
+            "hotspots": [dict(h) for h in getattr(m, "hotspots", [])],
         }
 
 
@@ -204,7 +208,7 @@ def _cell_config(cell: ServeCell, preset: str,
                                n_segments=n_segments),
         costs=cell.costs,
         workload=cell.workload, n_threads=cell.n_threads,
-        horizon=horizon, p_abort=cell.p_abort)
+        horizon=horizon, p_abort=cell.p_abort, attrib=cell.attrib)
 
 
 def _pctl(resp_us: list, q: float) -> float:
@@ -387,7 +391,7 @@ def _revive(packed, width: int, rows: np.ndarray):
 
 def serve(cells: Iterable[ServeCell], *, seg_ticks: int,
           chunk_size: int | None = None, return_states: bool = False,
-          keep_responses: bool = False,
+          keep_responses: bool = False, metrics_registry=None,
           verbose: bool = False) -> ServeResults:
     """Serve every cell's arrival schedule over its horizon.
 
@@ -404,6 +408,10 @@ def serve(cells: Iterable[ServeCell], *, seg_ticks: int,
     response histogram (memory O(N_HIST) regardless of horizon);
     ``keep_responses=True`` additionally keeps every raw response in
     ``ServeResults.responses[name]`` for parity checks.
+
+    ``metrics_registry`` (a :class:`repro.serving.metrics.ServingMetrics`)
+    is fed every boundary record as it is produced — the live-scrape
+    path: render/dump/serve_http it concurrently from another thread.
     """
     cells = list(cells)
     assert cells and seg_ticks >= 1
@@ -553,6 +561,8 @@ def serve(cells: Iterable[ServeCell], *, seg_ticks: int,
                                      if c.sla_us > 0 and u > c.sla_us),
                         max_qlen=int(snap.max_qlen),
                         n_waiting=int(snap.n_waiting)))
+                    if metrics_registry is not None:
+                        metrics_registry.observe(c.name, ln.records[-1])
                     ln.g_prev = g_now
 
         if return_states:

@@ -26,6 +26,16 @@ Schema ``repro.sweep/v3`` (obs layer, additive like v2): point
 elapsed ticks), and segment records gain per-window ``breakdown`` plus
 end-of-segment ``wait_hist`` / ``occ_hist`` log2-bucket distribution
 histograms. v1/v2 documents still load.
+
+Schema ``repro.sweep/v4`` (hotspot attribution, additive): point
+``metrics`` and segment records gain a ``hotspots`` array — the top-K
+rows of the engine's per-record contention accumulator for the run /
+window ({"row", "wait_ticks", "grants", "timeouts", "victims",
+"queue_sum", "queue_max"} dicts, wait-descending). Empty when the run's
+``EngineConfig.attrib`` is off, so v4 documents of attribution-off runs
+differ from v3 only by the tag and an empty list. Conservation: the
+full (untruncated) accumulator's wait_ticks sum equals
+``breakdown["lock_wait"]`` exactly. v1-v3 documents still load.
 """
 from __future__ import annotations
 
@@ -37,8 +47,9 @@ from typing import Any
 
 from .runner import SweepResults
 
-SCHEMA = "repro.sweep/v3"
-SCHEMAS_READABLE = ("repro.sweep/v1", "repro.sweep/v2", "repro.sweep/v3")
+SCHEMA = "repro.sweep/v4"
+SCHEMAS_READABLE = ("repro.sweep/v1", "repro.sweep/v2", "repro.sweep/v3",
+                    "repro.sweep/v4")
 
 
 def point_record(res: SweepResults, name: str,

@@ -382,7 +382,7 @@ class TestStoreV3:
         path = os.path.join(tmp_path, "gov.json")
         save_results(path, res, meta={"tag": "t"})
         doc = load_results(path)
-        assert doc["schema"] == "repro.sweep/v3"
+        assert doc["schema"] == "repro.sweep/v4"
         rec = doc["points"][0]
         assert len(rec["segments"]) == 3
         assert rec["segments"][0]["preset"] == "o2"

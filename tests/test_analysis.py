@@ -94,10 +94,13 @@ class TestLint:
         assert any(f.rule == "cond-count" for f in findings), findings
 
     def test_cond_sites_match_protocol_registry(self):
-        """Every cond site is gated by a real ProtocolParams flag."""
+        """Every cond site is gated by a real traced flag — either a
+        ProtocolParams field or a DynParams run knob (contention_attrib
+        is gated by EngineConfig.attrib)."""
         pp = protocol_params("mysql")
         for site, flag in JL.PROTOCOL_COND_SITES.items():
-            assert hasattr(pp, flag), (site, flag)
+            assert hasattr(pp, flag) or flag in JL.E.DynParams._fields, \
+                (site, flag)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,409 @@
+"""Hotspot-attribution tests (DESIGN.md §14): contention-accumulator
+conservation (per run and per governed segment), attribution-off
+bit-exactness and zero-recompile, the blame matrix, the unified
+queue-threshold detector, export schema validity with hotspot lanes,
+and the Prometheus serving-metrics registry."""
+import json
+import re
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (DEFAULT_THRESHOLD, detect_hot, detect_hot_queue,
+                        init_hotspot, update_hotspot_queue)
+from repro.core.lock import WorkloadSpec, simulate
+from repro.core.lock import engine as E
+from repro.core.lock.engine import (CA_GRANTS, CA_QMAX, CA_WAIT, N_CA,
+                                    EngineConfig, TB_LOCKWAIT)
+from repro.core.lock.costs import CostModel, protocol_params
+from repro.core.lock.metrics import delta_globals, extract, hotspot_rows
+from repro.obs import (check_ca_conservation, events_host, gini,
+                       hotspot_lane_events, hotspot_summary,
+                       simulate_traced, to_chrome_trace, wait_share)
+from repro.obs.blame import blame_matrix, blame_table, critical_path
+from repro.obs.export import _wait_spans, wait_profile
+from repro.serving import (MetricFamily, ServeCell, ServingMetrics,
+                           poisson, serve)
+
+ZIPF = WorkloadSpec(kind="zipf", txn_len=4, n_rows=512, zipf_s=0.9)
+HOT = WorkloadSpec(kind="hotspot_update", txn_len=1, n_rows=512)
+PROTOCOLS = ["mysql", "o1", "o2", "group", "bamboo", "brook2pl"]
+HORIZON = 60_000
+
+
+def leaves(tree):
+    return jax.tree_util.tree_leaves(tree)
+
+
+class TestConservation:
+    """sum(ca[wait]) == tb[lock_wait] exactly — the accumulator is a
+    lossless per-record decomposition of a number the engine already
+    reports (ISSUE acceptance gate: 6 protocols x 3 seeds)."""
+
+    @pytest.mark.parametrize("proto", PROTOCOLS)
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_whole_run(self, proto, seed):
+        s = simulate(proto, ZIPF, n_threads=24, horizon=HORIZON,
+                     seed=seed, attrib=True)
+        total = check_ca_conservation(s)
+        assert total > 0, "zipf under contention must produce lock wait"
+
+    def test_per_segment_windows(self):
+        """Conservation holds on every delta_globals window of a
+        segmented run, not just end-to-end — both sides charge the same
+        per-iteration mask, so every prefix (hence every window) agrees."""
+        cfg = EngineConfig(
+            protocol=protocol_params("mysql"), costs=CostModel(),
+            workload=ZIPF, n_threads=24, horizon=HORIZON, attrib=True)
+        stat, dp = E.split_config(cfg)
+        s = E.init_state_dyn(stat, dp)
+        g_prev = jax.device_get(s.g)
+        seen = 0
+        for k in range(4):
+            until = HORIZON * (k + 1) // 4
+            s, _snap = E.run_segment(stat, dp, s, until)
+            g_now = jax.device_get(s.g)
+            w = delta_globals(g_prev, g_now)
+            seen += check_ca_conservation(w)
+            g_prev = g_now
+        # windows partition the run: their wait totals sum to the run's
+        assert seen == check_ca_conservation(s)
+
+    def test_hotspot_rows_match_accumulator(self):
+        s = simulate("mysql", ZIPF, n_threads=24, horizon=HORIZON,
+                     attrib=True)
+        ca = np.asarray(s.g.ca, dtype=np.int64)
+        rows = hotspot_rows(ca, top_k=4)
+        assert rows and rows == sorted(
+            rows, key=lambda r: (-r["wait_ticks"], -r["grants"]))
+        for r in rows:
+            assert r["wait_ticks"] == int(ca[CA_WAIT, r["row"]])
+            assert r["grants"] == int(ca[CA_GRANTS, r["row"]])
+
+    def test_extract_populates_hotspots(self):
+        s = simulate("mysql", ZIPF, n_threads=24, horizon=HORIZON,
+                     attrib=True)
+        r = extract("mysql", 24, s)
+        assert r.hotspots and r.hotspots[0]["wait_ticks"] > 0
+        s_off = simulate("mysql", ZIPF, n_threads=24, horizon=HORIZON)
+        assert extract("mysql", 24, s_off).hotspots == []
+
+
+class TestAttribOff:
+    """attrib=False must be the stock engine — the accumulator is
+    write-only, so disabling it changes exactly nothing else."""
+
+    @pytest.mark.parametrize("proto", ["mysql", "brook2pl"])
+    def test_bit_exact_off_vs_absent(self, proto):
+        s_on = simulate(proto, ZIPF, n_threads=24, horizon=HORIZON,
+                        attrib=True)
+        s_off = simulate(proto, ZIPF, n_threads=24, horizon=HORIZON)
+        diff = [i for i, (a, b) in enumerate(zip(leaves(s_on),
+                                                 leaves(s_off)))
+                if not np.array_equal(np.asarray(a), np.asarray(b))]
+        # exactly one leaf differs: the ca accumulator itself
+        assert len(diff) == 1
+        assert np.all(np.asarray(s_off.g.ca) == 0)
+        assert np.asarray(s_on.g.ca).sum() > 0
+
+    def test_flag_is_traced_no_recompile(self):
+        n0 = E._run_dyn._cache_size()
+        simulate("mysql", ZIPF, n_threads=24, horizon=5_000)
+        n1 = E._run_dyn._cache_size()
+        simulate("mysql", ZIPF, n_threads=24, horizon=5_000, attrib=True)
+        assert E._run_dyn._cache_size() == n1, \
+            "attrib flip must not add a compile-cache entry"
+        assert n1 <= n0 + 1
+
+
+def _ev(rows):
+    """Synthetic event table from (ts, tid, row, ev) tuples."""
+    ts, tid, row, ev = (np.asarray(c, dtype=np.int32)
+                        for c in zip(*rows))
+    return {"ts": ts, "tid": tid, "row": row, "ev": ev,
+            "n": len(rows), "dropped": 0, "cap": 4096}
+
+
+# event ids (match obs.trace.EVENTS)
+GRANT, WAIT, TIMEOUT, VICTIM, RELEASE, GJOIN, COMMIT, ABORT = range(8)
+
+
+class TestBlame:
+    def test_single_blocker_full_attribution(self):
+        # t0 holds row 5 over [0, 10); t1 waits [2, 10) then is granted
+        ev = _ev([(0, 0, 5, GRANT), (2, 1, 5, WAIT),
+                  (10, 0, 5, RELEASE), (10, 1, 5, GRANT),
+                  (12, 1, -1, COMMIT), (15, 0, -1, COMMIT)])
+        b = blame_matrix(ev, end=20)
+        assert b.total_wait == 8 and b.n_spans == 1
+        assert b.matrix == {(0, 0): {5: 8}}
+        assert b.per_txn == {(0, 0): 8}
+        assert b.per_record == {5: 8}
+        assert b.unattributed == {}
+
+    def test_attempt_numbering_after_abort(self):
+        # t0's first attempt aborts; its SECOND attempt holds the row
+        # while t1 waits — blame lands on attempt #1, not #0
+        ev = _ev([(0, 0, 5, GRANT), (3, 0, -1, ABORT),
+                  (4, 0, 5, GRANT), (5, 1, 5, WAIT),
+                  (9, 0, -1, COMMIT), (9, 1, 5, GRANT),
+                  (11, 1, -1, COMMIT)])
+        b = blame_matrix(ev, end=20)
+        assert b.per_txn == {(0, 1): 4}
+        assert b.matrix == {(0, 1): {5: 4}}
+
+    def test_unattributed_without_holder(self):
+        # nobody recorded holding row 7: the span stays unattributed
+        ev = _ev([(2, 1, 7, WAIT), (10, 1, 7, GRANT),
+                  (12, 1, -1, COMMIT)])
+        b = blame_matrix(ev, end=20)
+        assert b.total_wait == 8 and b.per_txn == {}
+        assert b.unattributed == {7: 8}
+
+    def test_critical_path_chain(self):
+        # t2 waits on t1 (row 3), t1 waits on t0 (row 5): 2 hops
+        ev = _ev([(0, 0, 5, GRANT), (0, 1, 3, GRANT),
+                  (1, 2, 3, WAIT), (2, 1, 5, WAIT),
+                  (10, 0, -1, COMMIT), (10, 1, 5, GRANT),
+                  (12, 1, -1, COMMIT), (12, 2, 3, GRANT),
+                  (14, 2, -1, COMMIT)])
+        path = critical_path(ev, end=20)
+        assert [h["tid"] for h in path] == [2, 1]
+        assert [h["row"] for h in path] == [3, 5]
+        # blocker is the holding (tid, attempt) pair
+        assert path[0]["blocker"] == (1, 0)
+        assert path[1]["blocker"] == (0, 0)
+
+    def test_per_record_matches_wait_profile_on_real_trace(self):
+        s, tb = simulate_traced("mysql", ZIPF, n_threads=24,
+                                horizon=HORIZON, cap=65_536)
+        ev = events_host(tb)
+        end = int(s.g.now)
+        b = blame_matrix(ev, end=end)
+        spans = list(_wait_spans(ev, end=end))
+        per_row = {}
+        for _tid, row, t0, t1, _e in spans:
+            per_row[row] = per_row.get(row, 0) + (t1 - t0)
+        assert b.per_record == per_row
+        assert b.n_spans == len(spans)
+        assert "blame table" in blame_table(ev, end=end)
+
+
+class TestDetectorUnification:
+    """One threshold rule (queue depth > 32) across the batch detector,
+    the engine, and the accumulator's CA_QMAX lane."""
+
+    def test_queue_32_promote_rule(self):
+        q = np.zeros(16, dtype=np.int32)
+        q[3] = DEFAULT_THRESHOLD          # boundary: NOT hot (strict >)
+        q[7] = DEFAULT_THRESHOLD + 1      # hot
+        hot = np.asarray(detect_hot_queue(q))
+        assert not hot[3] and hot[7] and hot.sum() == 1
+
+    def test_batch_detector_agrees_with_queue_detector(self):
+        ids = np.repeat(np.arange(4), [40, 33, 32, 1])
+        from repro.core import batch_counts
+        counts = batch_counts(ids, 8)
+        assert np.array_equal(np.asarray(detect_hot(ids, 8)),
+                              np.asarray(detect_hot_queue(counts)))
+
+    def test_promote_demote_cycle(self):
+        st = init_hotspot(8)
+        deep = np.zeros(8, dtype=np.int32)
+        deep[2] = 40
+        st = update_hotspot_queue(st, deep)
+        assert bool(st.hot[2]) and st.hot.sum() == 1
+        # drained queues: EMA decays, row demotes once below the floor
+        calm = np.zeros(8, dtype=np.int32)
+        for _ in range(40):
+            st = update_hotspot_queue(st, calm)
+        assert not bool(st.hot[2])
+
+    def test_engine_qmax_feeds_the_same_rule(self):
+        s = simulate("mysql", ZIPF, n_threads=64, horizon=HORIZON,
+                     attrib=True)
+        ca = np.asarray(s.g.ca)
+        summ = hotspot_summary(s, ZIPF)
+        assert summ["n_hot_rule"] == int(
+            np.asarray(detect_hot_queue(ca[CA_QMAX])).sum())
+
+
+class TestExportSchema:
+    """Chrome-trace export validity: json round-trip, required fields,
+    monotonic per-track timestamps, counter lanes (satellite)."""
+
+    def _trace(self, lanes=0):
+        s, tb = simulate_traced("mysql", ZIPF, n_threads=24,
+                                horizon=HORIZON, cap=65_536)
+        ev = events_host(tb)
+        return to_chrome_trace(ev, label="t", end=int(s.g.now),
+                               hotspot_lanes=lanes), ev
+
+    def test_roundtrip_and_required_fields(self):
+        doc, _ = self._trace()
+        doc2 = json.loads(json.dumps(doc))
+        assert doc2["traceEvents"]
+        for e in doc2["traceEvents"]:
+            assert e["ph"] in ("X", "i", "M", "C")
+            assert "pid" in e and "tid" in e and "name" in e
+            if e["ph"] != "M":
+                assert isinstance(e["ts"], (int, float))
+                assert e["ts"] >= 0
+            if e["ph"] == "X":
+                assert e["dur"] >= 0
+
+    def test_monotonic_per_track(self):
+        doc, _ = self._trace(lanes=4)
+        tracks = {}
+        for e in doc["traceEvents"]:
+            if e["ph"] == "M":
+                continue
+            tracks.setdefault((e["pid"], e["tid"], e["ph"]),
+                              []).append(e["ts"])
+        assert tracks
+        for key, ts in tracks.items():
+            assert all(a <= b for a, b in zip(ts, ts[1:])), key
+
+    def test_hotspot_lanes(self):
+        doc, ev = self._trace(lanes=3)
+        counters = [e for e in doc["traceEvents"] if e["ph"] == "C"]
+        assert counters
+        lanes = {e["name"] for e in counters}
+        assert len(lanes) <= 3
+        for name in lanes:
+            series = [e for e in counters if e["name"] == name]
+            vals = [list(e["args"].values())[0] for e in series]
+            assert all(v >= 0 for v in vals), name
+            # depth timeline from +-1 span deltas must return to its
+            # floor by the end of the capture window
+            assert vals[-1] == 0, name
+        # lanes are additive: base export unchanged (lanes bring their
+        # counter events plus their track-name "M" metadata, nothing else)
+        base, _ = self._trace()
+        extra = [e for e in doc["traceEvents"]
+                 if e["ph"] != "C" and not (
+                     e["ph"] == "M" and "hotspot" in str(
+                         e.get("args", {}).get("name", "")))]
+        assert extra == base["traceEvents"]
+
+    def test_lane_events_standalone(self):
+        _, ev = self._trace()
+        evs = hotspot_lane_events(ev, top_k=2, end=200_000)
+        assert evs and all(e["ph"] in ("C", "M") for e in evs)
+
+
+class TestServingMetrics:
+    def _record_like(self):
+        res_reg = ServingMetrics(sla_budget=0.01, top_k=3)
+        w = WorkloadSpec(kind="zipf", n_rows=256, txn_len=8, zipf_s=1.2)
+        cells = [
+            ServeCell(name="on", schedule=poisson(0.004, 40_000, seed=1),
+                      workload=w, n_threads=8, preset="mysql",
+                      sla_us=500.0, attrib=True),
+            ServeCell(name="off", schedule=poisson(0.004, 40_000, seed=2),
+                      workload=w, n_threads=8, preset="mysql",
+                      sla_us=500.0),
+        ]
+        res = serve(cells, seg_ticks=10_000, metrics_registry=res_reg)
+        return res_reg, res
+
+    def test_counters_match_serving_totals(self):
+        reg, res = self._record_like()
+        for name in ("on", "off"):
+            sv = res.serving[name]
+            assert reg.get("repro_serving_arrivals_total",
+                           cell=name) == sv.arrived
+            assert reg.get("repro_serving_completed_total",
+                           cell=name) == sv.completed
+            assert reg.get("repro_serving_sla_miss_total",
+                           cell=name) == sv.sla_miss
+            assert reg.get("repro_serving_commits_total",
+                           cell=name) == sv.engine.commits
+
+    def test_hotspot_gauges_gated_by_attrib(self):
+        reg, res = self._record_like()
+        fam = reg.families["repro_hotspot_wait_ticks"].samples
+        assert any(("cell", "on") in k for k in fam)
+        assert not any(("cell", "off") in k for k in fam)
+        # record JSON mirrors the gating
+        assert any(rec["hotspots"] for rec in res.segments["on"])
+        assert all(rec["hotspots"] == [] for rec in res.segments["off"])
+
+    def test_exposition_format(self):
+        reg, _ = self._record_like()
+        text = reg.render()
+        assert text.endswith("\n")
+        sample = re.compile(
+            r'^[a-z_:][a-z0-9_:]*(\{[a-z_]+="[^"]*"'
+            r'(,[a-z_]+="[^"]*")*\})? -?\d+(\.\d+)?(e[+-]?\d+)?$',
+            re.IGNORECASE)
+        seen_types = {}
+        for line in text.strip().splitlines():
+            if line.startswith("# TYPE"):
+                _, _, name, kind = line.split(None, 3)
+                seen_types[name] = kind
+            elif not line.startswith("#"):
+                assert sample.match(line), line
+        assert seen_types["repro_serving_arrivals_total"] == "counter"
+        assert seen_types["repro_serving_queue_depth"] == "gauge"
+
+    def test_counters_monotonic_and_guarded(self):
+        f = MetricFamily("x_total", "counter", "h")
+        f.inc(3, cell="a")
+        f.inc(2, cell="a")
+        assert f.get(cell="a") == 5
+        with pytest.raises(ValueError):
+            f.inc(-1, cell="a")
+
+    def test_dump_and_http(self, tmp_path):
+        import urllib.request
+        reg = ServingMetrics()
+        f = reg.families["repro_serving_queue_depth"]
+        f.set(7, cell="c")
+        p = tmp_path / "m.prom"
+        reg.dump(p)
+        assert p.read_text() == reg.render()
+        srv = reg.serve_http()
+        try:
+            port = srv.server_address[1]
+            body = urllib.request.urlopen(
+                f"http://127.0.0.1:{port}/metrics").read().decode()
+            assert body == reg.render()
+            assert urllib.request.urlopen(
+                f"http://127.0.0.1:{port}/metrics").status == 200
+        finally:
+            srv.shutdown()
+
+
+class TestStoreSchema:
+    def test_v4_readable_and_current(self):
+        from repro.sweep import store
+        assert store.SCHEMA == "repro.sweep/v4"
+        for v in ("v1", "v2", "v3", "v4"):
+            assert f"repro.sweep/{v}" in store.SCHEMAS_READABLE
+
+
+class TestReports:
+    def test_gini_bounds(self):
+        assert gini(np.ones(10)) == pytest.approx(0.0, abs=1e-9)
+        one_hot = np.zeros(100)
+        one_hot[0] = 5.0
+        assert gini(one_hot) > 0.95
+        assert gini(np.zeros(4)) == 0.0
+
+    def test_wait_share_sums_to_one(self):
+        s = simulate("mysql", ZIPF, n_threads=24, horizon=HORIZON,
+                     attrib=True)
+        ws = wait_share(s)
+        assert ws.shape == (ZIPF.n_rows,)
+        assert ws.sum() == pytest.approx(1.0)
+
+    def test_summary_zipf_ground_truth(self):
+        s = simulate("mysql", ZIPF, n_threads=24, horizon=HORIZON,
+                     attrib=True)
+        h = hotspot_summary(s, ZIPF)
+        assert 0 < h["gini_zipf"] < 1
+        assert h["skew_amplification"] == pytest.approx(
+            h["gini_wait"] / h["gini_zipf"])
+        assert 0 <= h["top1_share"] <= h["top10_share"] <= 1
